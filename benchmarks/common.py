@@ -1,0 +1,129 @@
+"""Shared benchmark helpers: matrix runner, statistics, CSV output.
+
+Every ``tableN_*.py`` prints ``name,us_per_call,derived`` CSV lines
+(us_per_call = benchmark wall time; derived = the table's headline
+numbers) and writes full JSON under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.perf import PerfModel
+from repro.cluster.simulator import ClusterSim, SimPolicy, summarize
+from repro.cluster.workload import burstgpt_workload, swebench_workload, \
+    webarena_workload
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+# frozen calibration (see EXPERIMENTS.md §Calibration)
+SWE_RATE = 5.0          # tasks/min, 16 workers
+WEB_RATE = 8.0
+BURST_LOAD = 0.18
+N_WORKERS = 16
+
+
+def workload(kind: str, n_tasks: int, seed: int, cv_scale: float = 1.0):
+    if kind == "swebench":
+        return swebench_workload(n_tasks=n_tasks, rate_per_min=SWE_RATE,
+                                 seed=seed, cv_scale=cv_scale)
+    if kind == "webarena":
+        return webarena_workload(n_tasks=n_tasks, rate_per_min=WEB_RATE,
+                                 seed=seed)
+    if kind == "burstgpt":
+        return burstgpt_workload(horizon_s=60.0 * n_tasks / 4.0, seed=seed,
+                                 load_factor=BURST_LOAD)
+    raise ValueError(kind)
+
+
+def run_policy(policy: SimPolicy, tasks, seed: int = 0,
+               perf: Optional[PerfModel] = None,
+               n_workers: int = N_WORKERS, fault_plan=None) -> dict:
+    sim = ClusterSim(tasks, policy, n_workers=n_workers, perf=perf,
+                     seed=seed, fault_plan=fault_plan)
+    sim.run(horizon_s=86400)
+    out = summarize(sim)
+    out["coordinator"] = {
+        "steals": sim.co.stealer.steals,
+        "preemptions": sim.co.afs.preemptions,
+        "prefetch_issued": sim.co.prefetcher.issued,
+        "prefetch_correct": sim.co.prefetcher.correct,
+    }
+    return out
+
+
+def run_seeds(policy_fn: Callable[[], SimPolicy], kind: str, n_tasks: int,
+              seeds: Sequence[int], perf: Optional[PerfModel] = None,
+              cv_scale: float = 1.0) -> Dict[str, list]:
+    """Repeated trials with different workload+sim seeds."""
+    rows = []
+    for s in seeds:
+        tasks = workload(kind, n_tasks, seed=s, cv_scale=cv_scale)
+        rows.append(run_policy(policy_fn(), tasks, seed=s, perf=perf))
+    agg: Dict[str, list] = {}
+    for r in rows:
+        for k, v in r.items():
+            if isinstance(v, (int, float)):
+                agg.setdefault(k, []).append(float(v))
+    agg["_rows"] = rows
+    return agg
+
+
+def mean_std(xs: Sequence[float]):
+    xs = list(xs)
+    m = sum(xs) / len(xs)
+    if len(xs) < 2:
+        return m, 0.0
+    var = sum((x - m) ** 2 for x in xs) / (len(xs) - 1)
+    return m, math.sqrt(var)
+
+
+def welch_t(a: Sequence[float], b: Sequence[float]):
+    """Welch's t-test; two-tailed p via numerical t-distribution CDF."""
+    ma, sa = mean_std(a)
+    mb, sb = mean_std(b)
+    na, nb = len(a), len(b)
+    va, vb = sa ** 2 / max(na, 1), sb ** 2 / max(nb, 1)
+    denom = math.sqrt(va + vb) or 1e-12
+    t = (ma - mb) / denom
+    df = (va + vb) ** 2 / max(
+        va ** 2 / max(na - 1, 1) + vb ** 2 / max(nb - 1, 1), 1e-12)
+    df = max(df, 1.0)
+    # numerical two-tailed p for Student t
+    x = np.linspace(0, abs(t), 4000)
+    pdf = (1 + x ** 2 / df) ** (-(df + 1) / 2)
+    # normalization via B(1/2, df/2)
+    norm = math.sqrt(df) * math.exp(
+        math.lgamma(0.5) + math.lgamma(df / 2) - math.lgamma((df + 1) / 2))
+    cdf_half = np.trapezoid(pdf, x) / norm
+    p = max(0.0, 1.0 - 2 * cdf_half)
+    return t, df, p
+
+
+def stars(p: float) -> str:
+    if p < 0.001:
+        return "***"
+    if p < 0.01:
+        return "**"
+    if p < 0.05:
+        return "*"
+    return ""
+
+
+def geo_mean(xs: Sequence[float]) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def emit(name: str, wall_s: float, derived: str) -> None:
+    print(f"{name},{wall_s * 1e6:.0f},{derived}", flush=True)
+
+
+def save_json(name: str, payload) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                     default=str))

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.py)
+and writes full JSON to benchmarks/results/.  Roofline rows come from
+the dry-run artifacts (launch/dryrun.py must have run first; the repo
+ships the baseline sweep results).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig1_breakdown",
+    "benchmarks.table2_competitive_ratio",
+    "benchmarks.table3_end_to_end",
+    "benchmarks.table4_ablation",
+    "benchmarks.table5_pattern_inference",
+    "benchmarks.table6_slo",
+    "benchmarks.table7_overhead",
+    "benchmarks.table8_strategy",
+    "benchmarks.table9_sensitivity",
+    "benchmarks.table10_tool_variance",
+    "benchmarks.swap_analysis",
+    "benchmarks.thm2_drift",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    import importlib
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+        except Exception:
+            failures.append(mod_name)
+            print(f"{mod_name},0,ERROR", flush=True)
+            traceback.print_exc()
+    print(f"benchmarks/total,{(time.time() - t0) * 1e6:.0f},"
+          f"failures={len(failures)}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

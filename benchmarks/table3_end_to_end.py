@@ -1,0 +1,72 @@
+"""Table 3: end-to-end TCT + memory utilization, 7 systems x 2 agent
+benchmarks, multiple seeds, Welch's t-test vs each baseline."""
+from __future__ import annotations
+
+import time
+
+from repro.cluster import baselines as B
+
+from benchmarks.common import emit, geo_mean, mean_std, run_seeds, \
+    save_json, stars, welch_t
+
+SYSTEMS = ["vllm", "vllm_apc", "sglang", "llumnix", "trt_scaffolding",
+           "kvflow", "saga"]
+
+
+def run(seeds=(0, 1, 2), n_tasks=250):
+    out = {}
+    for wl in ["swebench", "webarena"]:
+        out[wl] = {}
+        for name in SYSTEMS:
+            out[wl][name] = run_seeds(B.ALL_BASELINES[name], wl, n_tasks,
+                                      seeds)
+    return out
+
+
+def main():
+    t0 = time.time()
+    res = run()
+    wall = time.time() - t0
+    table = {}
+    for wl in res:
+        table[wl] = {}
+        saga_tct = res[wl]["saga"]["tct_mean"]
+        for name in SYSTEMS:
+            tm, ts = mean_std(res[wl][name]["tct_mean"])
+            mm, ms = mean_std(res[wl][name]["mem_util"])
+            row = {"tct_mean": tm, "tct_std": ts, "mem": mm,
+                   "mem_std": ms}
+            if name != "saga":
+                sp = [a / b for a, b in
+                      zip(res[wl][name]["tct_mean"], saga_tct)]
+                row["speedup_vs_saga"], _ = mean_std(sp)
+                t, df, p = welch_t(res[wl][name]["tct_mean"], saga_tct)
+                row["welch_p"] = p
+                row["sig"] = stars(p)
+            table[wl][name] = row
+    # geometric-mean headline (paper: 1.64x vs vLLM+APC)
+    gm = geo_mean([table[wl]["vllm_apc"]["speedup_vs_saga"]
+                   for wl in table])
+    gm_vllm = geo_mean([table[wl]["vllm"]["speedup_vs_saga"]
+                        for wl in table])
+    table["headline"] = {"geo_mean_vs_apc": gm,
+                         "geo_mean_vs_vllm": gm_vllm}
+    save_json("table3_end_to_end", {"raw": {
+        wl: {k: {kk: vv for kk, vv in v.items() if kk != "_rows"}
+             for k, v in res[wl].items()} for wl in res},
+        "table": table})
+    for wl in ["swebench", "webarena"]:
+        for name in SYSTEMS:
+            r = table[wl][name]
+            d = (f"tct={r['tct_mean']:.0f}±{r['tct_std']:.0f}s "
+                 f"mem={r['mem']:.2f}")
+            if name != "saga":
+                d += (f" saga_speedup={r['speedup_vs_saga']:.2f}x"
+                      f"{r['sig']}")
+            emit(f"table3/{wl}/{name}", wall / 14, d)
+    emit("table3/geomean_vs_apc", wall,
+         f"{gm:.2f}x (paper 1.64x); vs vllm {gm_vllm:.2f}x (paper ~2.5x)")
+
+
+if __name__ == "__main__":
+    main()

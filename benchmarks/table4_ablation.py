@@ -1,0 +1,54 @@
+"""Table 4: ablation — full SAGA minus one component at a time.
+
+Run in the paper's pressured regime (KV pool sized so idle caches
+compete for space during tool calls) — otherwise the eviction-policy
+components show no effect."""
+from __future__ import annotations
+
+import time
+
+from repro.cluster import baselines as B
+from repro.cluster.perf import PerfModel
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import swebench_workload
+
+from benchmarks.common import emit, mean_std, save_json
+
+DROPS = ["walru", "ttl", "prefetch", "affinity", "stealing", "afs"]
+PAPER = {"walru": "+54%", "ttl": "+42%", "prefetch": "+19%",
+         "affinity": "+96%", "stealing": "+31%", "afs": "+8%"}
+
+
+def _run(policy, seeds):
+    perf = PerfModel(kv_pool_bytes=45e9)      # pressured pool
+    tcts = []
+    for s in seeds:
+        tasks = swebench_workload(n_tasks=200, rate_per_min=6.0, seed=s)
+        sim = ClusterSim(tasks, policy, n_workers=16, perf=perf, seed=s)
+        sim.run(horizon_s=86400)
+        tcts.append(summarize(sim)["tct_mean"])
+    return tcts
+
+
+def main():
+    t0 = time.time()
+    seeds = (0, 1)
+    full_tct, _ = mean_std(_run(B.saga(), seeds))
+    rows = {"full": {"tct": full_tct, "delta": "-"}}
+    for drop in DROPS:
+        tct, std = mean_std(_run(B.saga_ablation(drop), seeds))
+        delta = (tct - full_tct) / full_tct * 100.0
+        rows[f"w/o {drop}"] = {"tct": tct, "std": std,
+                               "delta": f"{delta:+.0f}%",
+                               "paper": PAPER[drop]}
+    save_json("table4_ablation", rows)
+    wall = time.time() - t0
+    for name, r in rows.items():
+        d = f"tct={r['tct']:.0f}s delta={r['delta']}"
+        if "paper" in r:
+            d += f" (paper {r['paper']})"
+        emit(f"table4/{name.replace(' ', '_')}", wall / 7, d)
+
+
+if __name__ == "__main__":
+    main()

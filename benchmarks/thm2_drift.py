@@ -1,0 +1,64 @@
+"""Theorem 2 empirical validation: AFS's urgency-proportional allocation
+is a restoring drift on the service deviation — V(t) = sum_i e_i(t)^2
+must trend DOWN when tenants start unevenly served, and completion-time
+deviation stays bounded."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.afs import AFSScheduler, TaskProgress
+
+from benchmarks.common import emit, save_json
+
+
+def simulate(n_tenants=8, epochs=400, capacity=8.0, seed=0,
+             rho=3.0):
+    """Epoch loop: allocate capacity ∝ AFS shares, serve, repeat.
+    Tenants have heterogeneous workloads (max/min = rho).  Inject an
+    initial imbalance and track the Lyapunov function."""
+    rng = random.Random(seed)
+    afs = AFSScheduler()
+    workloads = {}
+    for i in range(n_tenants):
+        w = 100.0 * (1.0 + (rho - 1.0) * i / (n_tenants - 1))
+        workloads[f"t{i}"] = w
+        afs.add_task(TaskProgress(f"task{i}", f"t{i}", deadline=2000.0,
+                                  work_remain_s=w))
+    # initial imbalance: tenant 0 pre-served (service AND progress)
+    afs.note_service("t0", 30.0)
+    afs.note_progress("task0", 30.0)
+    vs = []
+    t0 = 0.0
+    for ep in range(epochs):
+        now = ep * 1.0
+        shares = afs.recompute(now)
+        for ten, share in shares.items():
+            grant = share * capacity
+            afs.note_service(ten, grant)
+            task = f"task{list(workloads).index(ten)}"
+            afs.note_progress(task, grant)
+        vs.append(afs.lyapunov_v(now + 1.0, t0, capacity, workloads))
+    return vs
+
+
+def main():
+    t0 = time.time()
+    vs = simulate()
+    early = sum(vs[5:25]) / 20
+    late = sum(vs[-20:]) / 20
+    # restoring drift: V decreases from the injected imbalance
+    head = vs[1]
+    trough = min(vs[:100])
+    out = {"v_initial": head, "v_trough": trough, "v_early": early,
+           "v_late": late, "restored": trough < 0.5 * head}
+    save_json("thm2_drift", out)
+    wall = time.time() - t0
+    emit("thm2/lyapunov_drift", wall,
+         f"V(1)={head:.1f} -> min V={trough:.1f} "
+         f"({'NEGATIVE DRIFT CONFIRMED' if out['restored'] else 'no drift'}) "
+         "— urgency-proportional allocation restores underserved tenants")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Multi-pod dry-run demo: lower + compile one (arch x shape) cell on the
+2x16x16 = 512-chip production mesh and print the memory/cost analysis.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        [--arch command-r-35b] [--shape decode_32k]
+
+(This script re-execs itself with the 512-host-device XLA flag; the full
+sweep lives in repro/launch/dryrun.py.)
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="command-r-35b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.arch, "--shape", args.shape,
+           "--mesh", args.mesh, "--tag", "demo", "--force",
+           "--no-slopes" if args.mesh == "multi" else "--tag"]
+    if cmd[-1] == "--tag":
+        cmd = cmd[:-1]
+    print("running:", " ".join(cmd))
+    sys.exit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fault-tolerance & elasticity scenarios for the cluster simulator.
+
+Produces fault plans consumed by ``ClusterSim(fault_plan=...)``:
+  ("fail", w)     worker w dies: queue requeued, KV lost, affinity dropped
+  ("recover", w)  worker returns empty-cached
+  ("scale_up", 0) elastic scale-out: a fresh worker joins
+
+Also provides straggler injection (a slow worker = reduced rates), which
+exercises the paper's own mitigation (work stealing, §5.2).
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+Plan = List[Tuple[float, str, int]]
+
+
+def crash_recover_plan(n_workers: int, horizon_s: float, n_faults: int = 2,
+                       downtime_s: float = 120.0, seed: int = 0) -> Plan:
+    rng = random.Random(seed)
+    plan: Plan = []
+    for _ in range(n_faults):
+        w = rng.randrange(n_workers)
+        t = rng.uniform(0.2, 0.6) * horizon_s
+        plan.append((t, "fail", w))
+        plan.append((t + downtime_s, "recover", w))
+    return sorted(plan)
+
+
+def elastic_plan(horizon_s: float, n_new_workers: int = 2) -> Plan:
+    return [(horizon_s * (0.3 + 0.2 * i), "scale_up", 0)
+            for i in range(n_new_workers)]
+
+
+class StragglerInjector:
+    """Marks workers as stragglers by scaling their service rates.
+
+    The simulator consults ``factor(w)`` when computing step durations;
+    work stealing should drain the straggler's queue onto healthy
+    workers, bounding p99 TCT.
+    """
+
+    def __init__(self, slow_workers: dict):
+        # {worker_id: slowdown_factor>1}
+        self.slow = dict(slow_workers)
+
+    def factor(self, w: int) -> float:
+        return self.slow.get(w, 1.0)

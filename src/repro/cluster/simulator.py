@@ -1,0 +1,398 @@
+"""Discrete-event simulator of the 64-GPU (16-worker) serving cluster.
+
+Reproduces the paper's evaluation harness: agent tasks move through
+  arrival -> [route -> queue -> LLM step -> tool call]* -> done
+with per-worker continuous-batching slots, a WA-LRU/LRU/prefix KV pool,
+tool-aware TTLs, session-affinity routing, work stealing (with Llumnix
+migration costs), AFS fairness, optional fault injection and elastic
+scaling.  The GlobalCoordinator (repro.core) makes every policy
+decision; the simulator only advances time.
+
+Routing modes (baseline matrix, §9.1 "Baselines"):
+  session — Eq. 7 affinity (SAGA, SGLang-like cache-aware)
+  least   — least-loaded per request (vLLM FCFS)
+  group   — prefix-hash affinity (vLLM+APC PrefixCacheAffinityRouter)
+  sticky  — always the home worker (KVFlow / TRT-LLM single-node)
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.coordinator import GlobalCoordinator, SAGAConfig
+from repro.cluster.perf import PerfModel
+from repro.cluster.workload import Task
+
+INF = float("inf")
+
+
+@dataclass
+class SimPolicy:
+    """Scheduler variant = SAGAConfig + routing/admission knobs."""
+    name: str = "saga"
+    saga: SAGAConfig = field(default_factory=SAGAConfig)
+    routing: str = "session"          # session | least | group | sticky
+    admission_max_tasks: Optional[int] = None   # DFS/BFS knob (Table 8)
+    queue_discipline: str = "afs"     # afs | fcfs
+
+
+@dataclass
+class StepJob:
+    task: Task
+    step_idx: int
+    enqueued_at: float
+    worker: int = -1
+
+
+@dataclass
+class WorkerState:
+    active: int = 0                    # busy batch slots
+    queue: List[Tuple[float, str, StepJob]] = field(default_factory=list)
+    busy_s: float = 0.0                # cumulative compute-busy seconds
+    regen_s: float = 0.0               # of which: cache regeneration
+    prefill_free_at: float = 0.0       # serial prefill pipeline head
+    active_kv: float = 0.0             # bytes held by running requests
+    alive: bool = True
+
+    def load(self, max_batch: int) -> float:
+        if not self.alive:
+            return INF
+        return (self.active + len(self.queue)) / max_batch
+
+
+@dataclass
+class TaskMetrics:
+    task_id: str
+    tenant: str
+    arrival: float
+    finish: float = -1.0
+    ideal_s: float = 0.0               # no-queue no-regen time incl tools
+    regen_tokens: float = 0.0
+    migrations: int = 0
+    steps: int = 0
+
+    @property
+    def tct(self) -> float:
+        return self.finish - self.arrival
+
+
+class ClusterSim:
+    def __init__(self, tasks: Sequence[Task], policy: SimPolicy,
+                 n_workers: int = 16, perf: Optional[PerfModel] = None,
+                 seed: int = 0,
+                 fault_plan: Optional[Sequence[Tuple[float, str, int]]] = None):
+        self.tasks = {t.task_id: t for t in tasks}
+        self.policy = policy
+        self.perf = perf or PerfModel()
+        self.rng = random.Random(seed)
+        self.n_workers = n_workers
+        cap = self.perf.kv_pool_bytes
+        self.co = GlobalCoordinator(policy.saga, n_workers, cap)
+        self.workers = [WorkerState() for _ in range(n_workers)]
+        self.metrics: Dict[str, TaskMetrics] = {}
+        self.events: List[Tuple[float, int, str, tuple]] = []
+        self._eid = itertools.count()
+        self.now = 0.0
+        self.active_tasks = 0
+        self.admission_queue: List[Task] = []
+        self.mem_samples: List[Tuple[float, float]] = []   # (dt, util)
+        self._last_mem_t = 0.0
+        self.migrations = 0
+        self.fault_plan = list(fault_plan or [])
+        # group routing: stable hash of workload name
+        self._group_worker = {}
+
+    # -- event plumbing ----------------------------------------------------
+    def _push(self, t: float, kind: str, args: tuple = ()) -> None:
+        heapq.heappush(self.events, (t, next(self._eid), kind, args))
+
+    def run(self, horizon_s: float = INF) -> Dict[str, TaskMetrics]:
+        for task in self.tasks.values():
+            self._push(task.arrival_s, "arrival", (task.task_id,))
+        self._push(self.perf.epoch_s, "epoch")
+        for t, kind, w in self.fault_plan:
+            self._push(t, kind, (w,))
+        while self.events:
+            t, _, kind, args = heapq.heappop(self.events)
+            if t > horizon_s:
+                break
+            self._sample_mem(t)
+            self.now = t
+            getattr(self, f"_on_{kind}")(*args)
+            if kind != "epoch" and self._all_done():
+                break
+        return self.metrics
+
+    def _all_done(self) -> bool:
+        return all(m.finish >= 0 for m in self.metrics.values()) and \
+            len(self.metrics) == len(self.tasks) and not self.admission_queue
+
+    def _sample_mem(self, t: float) -> None:
+        dt = t - self._last_mem_t
+        if dt <= 0:
+            return
+        util = (sum(p.used for p in self.co.pools) +
+                sum(w.active_kv for w in self.workers)) / \
+            (self.co.capacity * self.n_workers)
+        self.mem_samples.append((dt, util))
+        self._last_mem_t = t
+
+    # -- helpers -------------------------------------------------------------
+    def _loads(self) -> List[float]:
+        return [w.load(self.perf.max_batch) for w in self.workers]
+
+    def _route(self, task: Task) -> int:
+        mode = self.policy.routing
+        sid = task.task_id
+        loads = self._loads()
+        if mode == "least":
+            return min(range(self.n_workers),
+                       key=lambda i: (loads[i], self.rng.random()))
+        if mode == "group":
+            # PrefixCacheAffinityRouter: load-blind consistent hash of the
+            # request prefix.  An agent session's prompt keeps its own
+            # prefix, so the hash is stable per session — but the router
+            # cannot rebalance (hotspots) and overflows when the preferred
+            # worker saturates.
+            if sid not in self._group_worker:
+                self._group_worker[sid] = (hash(sid) * 2654435761)                     % self.n_workers
+            w = self._group_worker[sid]
+            if loads[w] < self.policy.saga.theta and self.workers[w].alive:
+                return w
+            return min(range(self.n_workers),
+                       key=lambda i: (loads[i], self.rng.random()))
+        if mode == "sticky":
+            home = self.co.router.home.get(sid)
+            if home is not None and self.workers[home].alive:
+                return home
+            w = min(range(self.n_workers), key=lambda i: loads[i])
+            self.co.router.set_home(sid, w)
+            return w
+        return self.co.route(sid, loads, self.now)
+
+    def _ideal_time(self, task: Task) -> float:
+        t = 0.0
+        for i, s in enumerate(task.steps):
+            t += self.perf.step_compute_s(0.0, s.new_prompt_tokens,
+                                          s.out_tokens)
+            t += s.tool_latency_s
+        return t
+
+    # -- events ----------------------------------------------------------------
+    def _on_arrival(self, task_id: str) -> None:
+        task = self.tasks[task_id]
+        self.metrics[task_id] = TaskMetrics(
+            task_id, task.tenant, task.arrival_s,
+            ideal_s=self._ideal_time(task), steps=task.n_steps)
+        cap = self.policy.admission_max_tasks
+        if cap is not None and self.active_tasks >= cap:
+            self.admission_queue.append(task)
+            return
+        self._admit(task)
+
+    def _admit(self, task: Task) -> None:
+        self.active_tasks += 1
+        work_est = self._ideal_time(task)
+        deadline = self.now + 1.5 * work_est
+        self.co.register_task(task.task_id, task.tenant, task.tools(),
+                              deadline, work_est, self.now,
+                              prefix_tokens=task.prefix_tokens)
+        self._enqueue_step(StepJob(task, 0, self.now))
+
+    def _can_admit(self, w: int, job: StepJob) -> bool:
+        """Slot AND memory admission: a decode starts only if its KV fits
+        beside the running requests (idle cache is evictable)."""
+        ws = self.workers[w]
+        if not ws.alive or ws.active >= self.perf.max_batch:
+            return False
+        ctx_bytes = job.task.context_before(job.step_idx) * \
+            self.perf.kv_bytes_per_token
+        return ws.active_kv + ctx_bytes <= self.co.capacity
+
+    def _enqueue_step(self, job: StepJob) -> None:
+        w = self._route(job.task)
+        job.worker = w
+        ws = self.workers[w]
+        if self._can_admit(w, job):
+            ws.active += 1
+            self._start_step(job)
+        else:
+            prio = -self.co.afs.priority(job.task.tenant) \
+                if self.policy.queue_discipline == "afs" else job.enqueued_at
+            ws.queue.append((prio, job.task.task_id, job))
+            ws.queue.sort(key=lambda x: (x[0], x[2].enqueued_at))
+
+    def _start_step(self, job: StepJob) -> None:
+        task, i, w = job.task, job.step_idx, job.worker
+        step = task.steps[i]
+        ctx = task.context_before(i)
+        ws = self.workers[w]
+        self.co.ensure_headroom(w, ws.active_kv,
+                                ctx * self.perf.kv_bytes_per_token, self.now)
+        hit, pf_extra, bg_tokens = self.co.on_step_start(
+            task.task_id, w, ctx, self.now)
+        rate = self.perf.prefill_tokens_per_s
+        # prefill is compute-bound and serializes per worker; decode slots
+        # run in parallel (continuous batching is memory-bound).
+        pf_tokens = pf_extra if hit else pf_extra + step.new_prompt_tokens
+        regen = 0.0 if hit else pf_extra
+        if bg_tokens > 0.0:
+            # speculative prefetch: the suffix regeneration ran during
+            # the tool gap IF the prefill server had idle time; compute
+            # is charged either way (speculation is never free work).
+            bg_dur = bg_tokens / rate
+            if ws.prefill_free_at + bg_dur <= self.now:
+                ws.busy_s += bg_dur          # hidden off the critical path
+            else:
+                pf_tokens += bg_tokens       # server busy: regen on path
+                regen += bg_tokens
+        pf_start = max(self.now, ws.prefill_free_at)
+        pf_dur = pf_tokens / rate
+        ws.prefill_free_at = pf_start + pf_dur
+        decode_dur = step.out_tokens / self.perf.decode_tokens_per_s
+        done = pf_start + pf_dur + decode_dur
+        ws.busy_s += pf_dur + decode_dur
+        ws.regen_s += regen / rate
+        ws.active_kv += ctx * self.perf.kv_bytes_per_token
+        self.metrics[task.task_id].regen_tokens += regen
+        self._push(done, "llm_done", (task.task_id, i, w))
+
+    def _on_llm_done(self, task_id: str, i: int, w: int) -> None:
+        task = self.tasks[task_id]
+        ws = self.workers[w]
+        ws.active = max(0, ws.active - 1)
+        ws.active_kv = max(
+            0.0, ws.active_kv -
+            task.context_before(i) * self.perf.kv_bytes_per_token)
+        self._drain_queue(w)
+        step = task.steps[i]
+        ctx_after = task.context_after(i)
+        if i + 1 >= task.n_steps:
+            # final step's action is "finish" — no tool wait
+            self.co.task_finished(task_id, self.now)
+            self.metrics[task_id].finish = self.now
+            self.active_tasks -= 1
+            if self.admission_queue:
+                self._admit(self.admission_queue.pop(0))
+            return
+        # the tool observation has not arrived yet: the cached context
+        # covers everything up to and including this step's output
+        ctx_cached = ctx_after - step.obs_tokens
+        entry_bytes = ctx_cached * self.perf.kv_bytes_per_token
+        self.co.on_step_end(task_id, w, ctx_cached, entry_bytes,
+                            step.tool, self.now)
+        self._push(self.now + step.tool_latency_s, "tool_done",
+                   (task_id, i, w))
+
+    def _on_tool_done(self, task_id: str, i: int, w: int) -> None:
+        task = self.tasks[task_id]
+        step = task.steps[i]
+        self.co.on_tool_done(task_id, step.tool, step.tool_latency_s,
+                             step.obs_tokens, self.now)
+        self._enqueue_step(StepJob(task, i + 1, self.now))
+
+    def _drain_queue(self, w: int) -> None:
+        ws = self.workers[w]
+        while ws.queue and self._can_admit(w, ws.queue[0][2]):
+            _, _, job = ws.queue.pop(0)
+            ws.active += 1
+            self._start_step(job)
+
+    # -- epoch: AFS + work stealing ------------------------------------------
+    def _on_epoch(self) -> None:
+        loads = self._loads()
+        queues = [[(j.enqueued_at, j.task.task_id) for _, _, j in w.queue]
+                  for w in self.workers]
+        decision, _ = self.co.epoch_tick(self.now, loads, queues)
+        if decision is not None:
+            vq = self.workers[decision.victim].queue
+            if self.co.stealer.accept(decision, len(vq), self.now):
+                idx = next((k for k, (_, sid, _) in enumerate(vq)
+                            if sid == decision.session_id), None)
+                if idx is not None:
+                    _, _, job = vq.pop(idx)
+                    mig = self.perf.sample_migration_s(self.rng)
+                    self.migrations += 1
+                    self.metrics[job.task.task_id].migrations += 1
+                    self._push(self.now + mig, "migr_done",
+                               (job.task.task_id, job.step_idx,
+                                decision.victim, decision.thief))
+        if self.events or not self._all_done():
+            self._push(self.now + self.perf.epoch_s, "epoch")
+
+    def _on_migr_done(self, task_id: str, step_idx: int, src: int,
+                      dst: int) -> None:
+        if task_id not in self.tasks:
+            return
+        self.co.migrate_session(task_id, src, dst, self.now)
+        job = StepJob(self.tasks[task_id], step_idx, self.now, dst)
+        ws = self.workers[dst]
+        if self._can_admit(dst, job):
+            ws.active += 1
+            self._start_step(job)
+        else:
+            ws.queue.append((0.0, task_id, job))
+
+    # -- faults / elasticity ---------------------------------------------------
+    def _on_fail(self, w: int) -> None:
+        ws = self.workers[w]
+        ws.alive = False
+        self.co.worker_failed(w)
+        requeue = [j for _, _, j in ws.queue]
+        ws.queue.clear()
+        ws.active = 0
+        for job in requeue:
+            self._enqueue_step(StepJob(job.task, job.step_idx, self.now))
+
+    def _on_recover(self, w: int) -> None:
+        self.workers[w].alive = True
+        self.co.worker_recovered(w)
+
+    def _on_scale_up(self, _unused: int = 0) -> None:
+        self.co.add_worker()
+        self.workers.append(WorkerState())
+        self.n_workers += 1
+
+
+# --- summary ----------------------------------------------------------------
+def summarize(sim: ClusterSim) -> dict:
+    ms = [m for m in sim.metrics.values() if m.finish >= 0]
+    if not ms:
+        return {}
+    tcts = sorted(m.tct for m in ms)
+    slo = sum(1 for m in ms if m.tct <= 1.5 * m.ideal_s) / len(ms)
+    total_busy = sum(w.busy_s for w in sim.workers) or 1.0
+    regen_frac = sum(w.regen_s for w in sim.workers) / total_busy
+    mem_num = sum(dt * u for dt, u in sim.mem_samples)
+    mem_den = sum(dt for dt, u in sim.mem_samples) or 1.0
+    span = (max(m.finish for m in ms) - min(m.arrival for m in ms)) or 1.0
+    pool = sim.co.pools[0]
+    hits = sim.co.cache_hits
+    miss = sim.co.cache_misses
+    by_tenant: Dict[str, List[TaskMetrics]] = {}
+    for m in ms:
+        by_tenant.setdefault(m.tenant.split("-")[0], []).append(m)
+    slo_by = {k: sum(1 for m in v if m.tct <= 1.5 * m.ideal_s) / len(v)
+              for k, v in by_tenant.items()}
+    evictions = sum(p.evictions for p in sim.co.pools)
+    inserts = evictions + sum(len(p.entries) for p in sim.co.pools) + hits
+    return {
+        "n_tasks": len(ms),
+        "tct_mean": sum(tcts) / len(tcts),
+        "tct_p50": tcts[len(tcts) // 2],
+        "tct_p99": tcts[min(len(tcts) - 1, int(0.99 * len(tcts)))],
+        "ideal_mean": sum(m.ideal_s for m in ms) / len(ms),
+        "slo_attainment": slo,
+        "slo_by_tenant": slo_by,
+        "mem_util": mem_num / mem_den,
+        "regen_time_frac": regen_frac,
+        "throughput_tasks_per_min": len(ms) / span * 60.0,
+        "cache_hit_rate": hits / max(hits + miss, 1),
+        "migrations_per_task": sim.migrations / len(ms),
+        "evict_rate": evictions / max(inserts, 1),
+        "regen_tokens_total": sum(m.regen_tokens for m in ms),
+    }

@@ -1,0 +1,26 @@
+"""SAGA's contribution: workflow-atomic scheduling primitives.
+
+Everything in this package is pure, deterministic Python (no jax): the
+same objects drive both the discrete-event cluster simulator
+(``repro.cluster``) and the real JAX serving engine (``repro.serving``).
+"""
+from repro.core.aeg import AEG, AEGNode, PatternInferencer, ToolStats
+from repro.core.walru import CacheEntry, WALRUCache, EvictionWeights
+from repro.core.ttl import ToolTTLPolicy, memory_pressure
+from repro.core.belady import BeladyOracle, replay_policy, competitive_ratio
+from repro.core.affinity import SessionRouter
+from repro.core.stealing import WorkStealer
+from repro.core.afs import AFSScheduler, TenantState
+from repro.core.prefetch import SpeculativePrefetcher
+from repro.core.coordinator import GlobalCoordinator, SAGAConfig
+
+__all__ = [
+    "AEG", "AEGNode", "PatternInferencer", "ToolStats",
+    "CacheEntry", "WALRUCache", "EvictionWeights",
+    "ToolTTLPolicy", "memory_pressure",
+    "BeladyOracle", "replay_policy", "competitive_ratio",
+    "SessionRouter", "WorkStealer",
+    "AFSScheduler", "TenantState",
+    "SpeculativePrefetcher",
+    "GlobalCoordinator", "SAGAConfig",
+]

@@ -1,0 +1,117 @@
+"""Agent Fair Share scheduling (paper §6, Eq. 8-9, Theorem 2).
+
+Definition 2:  AFS_i = sum_{t in T_i} work_remain(t) / (deadline(t) - now)
+
+work_remain(t) (Eq. 9) sums estimated prefill+decode GPU-seconds over the
+pending AEG nodes.  The epoch allocator (100 ms) assigns worker capacity
+proportionally to AFS and triggers preemption when a low-AFS task blocks
+a high-AFS task for > 500 ms — the preempted task's cache is migrated,
+not discarded (§6.2), so WA-LRU predictions survive preemption (§3.1).
+
+Theorem 2 (Lyapunov drift): urgency-proportional allocation is a
+restoring force on the deviation e_i = S_i - mu_i * t; `lyapunov_v`
+exposes V(t) = sum e_i^2 so tests/benches can verify the negative-drift
+property empirically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class TaskProgress:
+    task_id: str
+    tenant: str
+    deadline: float
+    work_remain_s: float          # Eq. 9 estimate (GPU-seconds)
+    blocked_since: Optional[float] = None
+
+
+@dataclass
+class TenantState:
+    tenant: str
+    afs: float = 0.0
+    service_s: float = 0.0        # cumulative GPU-seconds received (S_i)
+    share: float = 0.0            # current epoch allocation fraction
+
+
+class AFSScheduler:
+    def __init__(self, epoch_s: float = 0.100,
+                 preempt_block_s: float = 0.500):
+        self.epoch_s = epoch_s
+        self.preempt_block_s = preempt_block_s
+        self.tenants: Dict[str, TenantState] = {}
+        self.tasks: Dict[str, TaskProgress] = {}
+        self.preemptions = 0
+
+    # -- registration ----------------------------------------------------
+    def add_task(self, tp: TaskProgress) -> None:
+        self.tasks[tp.task_id] = tp
+        self.tenants.setdefault(tp.tenant, TenantState(tp.tenant))
+
+    def finish_task(self, task_id: str) -> None:
+        self.tasks.pop(task_id, None)
+
+    def note_service(self, tenant: str, gpu_seconds: float) -> None:
+        self.tenants.setdefault(tenant, TenantState(tenant))
+        self.tenants[tenant].service_s += gpu_seconds
+
+    def note_progress(self, task_id: str, work_done_s: float) -> None:
+        t = self.tasks.get(task_id)
+        if t:
+            t.work_remain_s = max(0.0, t.work_remain_s - work_done_s)
+
+    # -- Eq. 8 -------------------------------------------------------------
+    def recompute(self, now: float) -> Dict[str, float]:
+        for ten in self.tenants.values():
+            ten.afs = 0.0
+        for t in self.tasks.values():
+            slack = max(t.deadline - now, self.epoch_s)
+            self.tenants[t.tenant].afs += t.work_remain_s / slack
+        total = sum(max(v.afs, 0.0) for v in self.tenants.values())
+        for ten in self.tenants.values():
+            ten.share = (ten.afs / total) if total > 0 else \
+                (1.0 / max(len(self.tenants), 1))
+        return {k: v.share for k, v in self.tenants.items()}
+
+    def priority(self, tenant: str) -> float:
+        t = self.tenants.get(tenant)
+        return t.afs if t else 0.0
+
+    # -- preemption (§6.2 step 4) ------------------------------------------
+    def note_blocked(self, task_id: str, now: float) -> None:
+        t = self.tasks.get(task_id)
+        if t and t.blocked_since is None:
+            t.blocked_since = now
+
+    def note_unblocked(self, task_id: str) -> None:
+        t = self.tasks.get(task_id)
+        if t:
+            t.blocked_since = None
+
+    def should_preempt(self, blocked_task: str, blocking_task: str,
+                       now: float) -> bool:
+        b = self.tasks.get(blocked_task)
+        lo = self.tasks.get(blocking_task)
+        if b is None or lo is None or b.blocked_since is None:
+            return False
+        if now - b.blocked_since < self.preempt_block_s:
+            return False
+        if self.priority(b.tenant) <= self.priority(lo.tenant):
+            return False
+        self.preemptions += 1
+        return True
+
+    # -- Theorem 2 instrumentation ------------------------------------------
+    def lyapunov_v(self, now: float, t0: float, capacity: float,
+                   workloads: Dict[str, float]) -> float:
+        """V(t) = sum_i (S_i(t) - mu_i * (t - t0))^2 with
+        mu_i = W_i / sum_j W_j * C (proportional fair share)."""
+        tot_w = sum(workloads.values()) or 1.0
+        v = 0.0
+        for ten, w in workloads.items():
+            mu = w / tot_w * capacity
+            s = self.tenants.get(ten, TenantState(ten)).service_s
+            v += (s - mu * (now - t0)) ** 2
+        return v

@@ -1,0 +1,332 @@
+"""Global coordinator: the workflow-atomic scheduling brain (paper §3.1).
+
+Wires AEGs + WA-LRU + TTL + affinity + stealing + AFS + prefetch into a
+single object used by BOTH the discrete-event simulator
+(``repro.cluster.simulator``) and the real JAX serving engine
+(``repro.serving.server``).  All methods take explicit ``now`` so the
+coordinator is time-source agnostic.
+
+Cross-layer behaviours from §3.1:
+  * AFS preemption migrates cache WITH its TTL state, so WA-LRU at the
+    destination keeps honoring the prediction (``migrate_session``).
+  * Work stealing is gated by both T_idle and R_max (in WorkStealer).
+  * Coordinator state is checkpointable (``snapshot``/``restore``) —
+    fault tolerance for 1000+-node deployments.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field, asdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.aeg import AEG, PatternInferencer, ToolStats
+from repro.core.affinity import SessionRouter
+from repro.core.afs import AFSScheduler, TaskProgress
+from repro.core.prefetch import SpeculativePrefetcher
+from repro.core.stealing import StealDecision, WorkStealer
+from repro.core.ttl import ToolTTLPolicy, memory_pressure
+from repro.core.walru import (CacheEntry, EvictionWeights, LRUCache,
+                              PrefixLRUCache, WALRUCache)
+
+
+@dataclass
+class SAGAConfig:
+    # WA-LRU (Eq. 1, Table 9)
+    alpha: float = 0.3
+    beta: float = 0.5
+    gamma: float = 0.2
+    # routing (Eq. 7)
+    theta: float = 0.8
+    # stealing (§5.2)
+    t_idle_s: float = 0.100
+    r_max: float = 2.0
+    # TTL (Algorithm 1 / Eq. 6)
+    ttl_percentile: float = 95.0
+    ttl_max_s: float = 300.0
+    th_low: float = 0.7
+    th_high: float = 0.9
+    # AEG inference (§3.3)
+    theta_conf: float = 0.7
+    min_tasks: int = 30
+    # AFS (§6)
+    epoch_s: float = 0.100
+    preempt_block_s: float = 0.500
+    # observability tier: hints | pattern | none
+    observability: str = "hints"
+    # cache policy: walru | lru | prefix | none (no cross-request reuse,
+    # vLLM v0.6.0 discards KV at request end)
+    cache_policy: str = "walru"
+    prefix_fraction: float = 0.35
+    # component toggles (Table 4 ablations)
+    enable_affinity: bool = True
+    enable_stealing: bool = True
+    enable_ttl: bool = True
+    enable_prefetch: bool = True
+    enable_afs: bool = True
+    seed: int = 0
+
+
+@dataclass
+class SessionInfo:
+    session_id: str
+    tenant: str
+    aeg: Optional[AEG]
+    node_id: int = 0
+    ctx_tokens: float = 0.0
+    cur_tool: str = "unknown"
+    tools_seen: List[str] = field(default_factory=list)
+    prefix_tokens: float = 0.0
+
+
+class GlobalCoordinator:
+    def __init__(self, cfg: SAGAConfig, n_workers: int,
+                 worker_capacity_bytes: float):
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.capacity = worker_capacity_bytes
+        self.sessions: Dict[str, SessionInfo] = {}
+        self.stats = ToolStats()
+        self.ttl = ToolTTLPolicy(p=cfg.ttl_percentile,
+                                 ttl_max_s=cfg.ttl_max_s)
+        self.router = SessionRouter(theta=cfg.theta)
+        self.stealer = WorkStealer(t_idle_s=cfg.t_idle_s, r_max=cfg.r_max,
+                                   seed=cfg.seed)
+        self.afs = AFSScheduler(epoch_s=cfg.epoch_s,
+                                preempt_block_s=cfg.preempt_block_s)
+        self.prefetcher = SpeculativePrefetcher()
+        self.inferencer = PatternInferencer(theta_conf=cfg.theta_conf,
+                                            min_tasks=cfg.min_tasks)
+        self.pools: List[WALRUCache] = [self._make_pool()
+                                        for _ in range(n_workers)]
+        self.alive = [True] * n_workers
+        # instrumentation
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.regen_tokens = 0.0
+
+    # ------------------------------------------------------------------
+    def _make_pool(self) -> WALRUCache:
+        w = EvictionWeights(self.cfg.alpha, self.cfg.beta, self.cfg.gamma)
+        if self.cfg.cache_policy == "none":
+            return LRUCache(0.0, w)          # nothing survives a request
+        if self.cfg.cache_policy == "lru":
+            return LRUCache(self.capacity, w)
+        if self.cfg.cache_policy == "prefix":
+            return PrefixLRUCache(self.capacity, w,
+                                  prefix_fraction=self.cfg.prefix_fraction)
+        return WALRUCache(self.capacity, w, p_reuse_fn=self._p_reuse)
+
+    def _p_reuse(self, entry: CacheEntry) -> float:
+        info = self.sessions.get(entry.session_id)
+        if info is None or info.aeg is None:
+            return 0.5
+        return info.aeg.p_reuse(info.node_id, info.ctx_tokens, self.stats)
+
+    # -- session lifecycle ----------------------------------------------
+    def register_task(self, session_id: str, tenant: str,
+                      planned_tools: Optional[Sequence[str]],
+                      deadline: float, work_est_s: float,
+                      now: float, prefix_tokens: float = 0.0) -> None:
+        aeg = None
+        if self.cfg.observability == "hints" and planned_tools:
+            aeg = AEG.linear_chain(list(planned_tools))
+        elif self.cfg.observability == "pattern":
+            first = planned_tools[0] if planned_tools else "unknown"
+            aeg = self.inferencer.infer(first)
+        self.sessions[session_id] = SessionInfo(
+            session_id, tenant, aeg, prefix_tokens=prefix_tokens)
+        if self.cfg.enable_afs:
+            self.afs.add_task(TaskProgress(session_id, tenant, deadline,
+                                           work_est_s))
+
+    def task_finished(self, session_id: str, now: float) -> None:
+        info = self.sessions.pop(session_id, None)
+        if info is not None:
+            self.inferencer.record_trace(info.tools_seen)
+        self.afs.finish_task(session_id)
+        self.router.forget(session_id)
+        for pool in self.pools:
+            pool.remove(session_id)
+
+    # -- routing (Eq. 7) ---------------------------------------------------
+    def route(self, session_id: str, loads: Sequence[float],
+              now: float) -> int:
+        loads = [l if self.alive[i] else float("inf")
+                 for i, l in enumerate(loads)]
+        if not self.cfg.enable_affinity:
+            return min(range(len(loads)), key=lambda i: loads[i])
+        return self.router.route(
+            session_id, loads,
+            cached=lambda w, s: self.pools[w].contains(s))
+
+    # -- cache events -------------------------------------------------------
+    def on_step_start(self, session_id: str, worker: int,
+                      ctx_tokens: float, now: float
+                      ) -> Tuple[bool, float]:
+        """Session begins an LLM step on `worker`.  Returns
+        (cache_hit, prefill_tokens, background_tokens):
+          hit  -> (True, delta_since_cached, 0): only the tool
+                  observation + new prompt prefill.
+          miss + correct speculative prefetch -> (False, delta, suffix):
+                  the suffix regeneration ran as BACKGROUND prefill
+                  during the tool gap (the simulator charges it to the
+                  worker's prefill server if it had idle capacity —
+                  prefetch hides latency, never compute).
+          miss -> (False, regen, 0): full (or radix-suffix) regeneration
+                  on the critical path."""
+        info = self.sessions.get(session_id)
+        pool = self.pools[worker]
+        entry = pool.lookup(session_id, now)
+        prefetch_hit = False
+        if info is not None and self.cfg.enable_prefetch:
+            prefetch_hit = self.prefetcher.resolve(
+                session_id, info.node_id + 1, now)
+        if entry is not None:
+            entry.pinned = True
+            self.cache_hits += 1
+            return True, max(0.0, ctx_tokens - entry.tokens), 0.0
+        self.cache_misses += 1
+        regen = ctx_tokens
+        if isinstance(pool, PrefixLRUCache) and info is not None:
+            regen = max(0.0, ctx_tokens - info.prefix_tokens)
+        if prefetch_hit and info is not None:
+            cached = info.ctx_tokens
+            delta = max(0.0, ctx_tokens - cached)
+            self.regen_tokens += cached
+            return False, delta, min(regen, cached)
+        self.regen_tokens += regen
+        return False, regen, 0.0
+
+    def ensure_headroom(self, worker: int, active_kv_bytes: float,
+                        required_bytes: float, now: float) -> int:
+        """Evict idle entries until a new step's KV fits next to the
+        running requests (vLLM preempts idle blocks the same way).
+        Returns number of evictions."""
+        pool = self.pools[worker]
+        n = 0
+        while (pool.used + active_kv_bytes + required_bytes > self.capacity
+               and pool.entries):
+            victim = pool.select_victim(now)
+            if victim is None:
+                break
+            pool.remove(victim.session_id)
+            pool.evictions += 1
+            pool.bytes_evicted += victim.size_bytes
+            n += 1
+        return n
+
+    def on_step_end(self, session_id: str, worker: int, ctx_tokens: float,
+                    entry_bytes: float, next_tool: str, now: float
+                    ) -> List[CacheEntry]:
+        """LLM step done; session enters a tool call.  Inserts/updates the
+        cache entry with a tool-aware TTL and maybe issues a prefetch.
+        Returns evicted entries."""
+        info = self.sessions.get(session_id)
+        if info is not None:
+            info.node_id += 1
+            info.ctx_tokens = ctx_tokens
+            info.cur_tool = next_tool
+            info.tools_seen.append(next_tool)
+            if (self.cfg.observability == "pattern"
+                    and info.aeg is not None):
+                info.aeg = self.inferencer.infer(next_tool)
+        pool = self.pools[worker]
+        m = memory_pressure(pool.utilization(), self.cfg.th_low,
+                            self.cfg.th_high)
+        deadline = None
+        if self.cfg.enable_ttl:
+            deadline = self.ttl.deadline(next_tool, now, m)
+        entry = CacheEntry(session_id=session_id, size_bytes=entry_bytes,
+                           t_last=now, tokens=ctx_tokens,
+                           node_id=info.node_id if info else 0,
+                           ttl_deadline=deadline)
+        evicted = pool.insert(entry, now)
+        if info is not None and self.cfg.enable_prefetch:
+            self.prefetcher.maybe_issue(session_id, info.aeg, info.node_id,
+                                        entry_bytes, now,
+                                        pool.utilization())
+        return evicted
+
+    def on_tool_done(self, session_id: str, tool: str, latency_s: float,
+                     obs_tokens: float, now: float) -> None:
+        self.stats.observe(tool, obs_tokens, latency_s)
+        self.ttl.observe(tool, latency_s)
+
+    # -- stealing / migration ------------------------------------------------
+    def epoch_tick(self, now: float, loads: Sequence[float],
+                   queues: Sequence[Sequence[Tuple[float, str]]]
+                   ) -> Tuple[Optional[StealDecision], Dict[str, float]]:
+        shares = self.afs.recompute(now) if self.cfg.enable_afs else {}
+        decision = None
+        if self.cfg.enable_stealing:
+            for w in range(len(loads)):
+                self.stealer.note_queue_state(w, not queues[w], now)
+            decision = self.stealer.maybe_steal(now, loads, queues)
+        return decision, shares
+
+    def migrate_session(self, session_id: str, src: int, dst: int,
+                        now: float) -> float:
+        """Move a session's cache entry (Llumnix-style).  TTL state moves
+        with it (§3.1).  Returns bytes migrated."""
+        entry = self.pools[src].remove(session_id)
+        if entry is None:
+            return 0.0
+        entry.t_last = now
+        self.pools[dst].insert(entry, now)
+        self.router.set_home(session_id, dst)
+        return entry.size_bytes
+
+    # -- fault tolerance -------------------------------------------------
+    def worker_failed(self, worker: int) -> List[str]:
+        """Worker dies: cache lost, affinities dropped; sessions re-route
+        on their next step (cache loss = regeneration, the same
+        accounting SAGA already does)."""
+        self.alive[worker] = False
+        lost = list(self.pools[worker].entries)
+        self.pools[worker] = self._make_pool()
+        dropped = self.router.evict_worker(worker)
+        return sorted(set(lost) | set(dropped))
+
+    def worker_recovered(self, worker: int) -> None:
+        self.alive[worker] = True
+
+    def add_worker(self) -> int:
+        self.pools.append(self._make_pool())
+        self.alive.append(True)
+        self.n_workers += 1
+        return self.n_workers - 1
+
+    # -- checkpoint/restart ------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "cfg": asdict(self.cfg),
+            "router_home": dict(self.router.home),
+            "sessions": {k: {
+                "tenant": v.tenant, "node_id": v.node_id,
+                "ctx_tokens": v.ctx_tokens, "cur_tool": v.cur_tool,
+                "tools_seen": list(v.tools_seen),
+                "prefix_tokens": v.prefix_tokens,
+            } for k, v in self.sessions.items()},
+            "ttl_hist": {k: list(v) for k, v in self.ttl.hist.items()},
+            "inferencer_counts": {a: dict(b) for a, b in
+                                  self.inferencer.counts.items()},
+            "inferencer_n": self.inferencer.n_tasks,
+            "alive": list(self.alive),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.router.home = dict(snap["router_home"])
+        for k, sv in snap["sessions"].items():
+            info = SessionInfo(k, sv["tenant"], None, sv["node_id"],
+                               sv["ctx_tokens"], sv["cur_tool"],
+                               list(sv["tools_seen"]), sv["prefix_tokens"])
+            if self.cfg.observability == "hints":
+                info.aeg = AEG.linear_chain(
+                    info.tools_seen[-1:] * 4 or ["unknown"])
+            self.sessions[k] = info
+        self.ttl.hist = {k: list(v) for k, v in snap["ttl_hist"].items()}
+        for a, b in snap["inferencer_counts"].items():
+            for c, n in b.items():
+                self.inferencer.counts[a][c] = n
+        self.inferencer.n_tasks = snap["inferencer_n"]
+        self.alive = list(snap["alive"])

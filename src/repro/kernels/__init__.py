@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+SAGA itself is a scheduler (no kernel-level contribution), but its
+substrate's hot loops are exactly the ops the serving stack spends its
+FLOPs on.  Four kernels, each with kernel.py (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ops.py (jit'd wrapper), ref.py (pure-jnp oracle):
+
+  flash_attention/  prefill: online-softmax tiled causal/GQA/SWA attention
+  paged_attention/  decode: block-table-indirected flash decoding
+                    (PagedAttention adapted to TPU scalar prefetch)
+  rwkv6/            WKV6 data-dependent-decay recurrence (chunked)
+  mamba_scan/       selective-SSM scan (chunked)
+
+All are validated in interpret=True mode on CPU against ref.py across
+shape/dtype sweeps (tests/test_kernels.py).
+"""

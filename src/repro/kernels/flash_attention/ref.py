@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from repro.models.layers import attention_dense
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) — dense softmax attention."""
+    return attention_dense(q, k, v, causal=causal, window=window)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the mamba scan kernel.
+
+Exact f32 recurrence (the model's production scan in
+``repro.models.mamba`` additionally rounds per-step outputs to bf16 to
+halve activation memory; the kernel keeps f32, so the oracle here stays
+f32 too and the bf16 variant is checked with a looser tolerance in the
+tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def mamba_scan_ref(x, dt, Bc, Cc, A_log, D):
+    """x, dt: (B, T, di); Bc, Cc: (B, T, ds); A_log: (di, ds); D: (di,).
+    Returns y (B, T, di) f32."""
+    B, T, di = x.shape
+    ds = Bc.shape[-1]
+    A = -jnp.exp(A_log.astype(F32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt.astype(F32)[:, :, None] * A[None])
+        dBx = (dtt * xt).astype(F32)[:, :, None] * bt.astype(F32)[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bis,bs->bi", h, ct.astype(F32))
+        return h, y
+
+    h0 = jnp.zeros((B, di, ds), F32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    _, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(F32) * D.astype(F32)[None, None]
+    return y

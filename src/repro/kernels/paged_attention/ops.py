@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_tables, lens,
+                    interpret: bool | None = None):
+    """q: (B, H, dh); pools: (num_blocks, block, K, dh);
+    block_tables: (B, nb) int32; lens: (B,) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_decode_attention(q, k_pool, v_pool, block_tables, lens,
+                                  interpret=interpret)

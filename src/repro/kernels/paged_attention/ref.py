@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: gather pages to contiguous KV, run dense decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention
+
+
+def paged_decode_ref(q, k_pool, v_pool, block_tables, lens):
+    """q: (B, H, dh); pools: (num_blocks, block, K, dh);
+    block_tables: (B, nb); lens: (B,).  Returns (B, H, dh)."""
+    B, H, dh = q.shape
+    _, block, K, _ = k_pool.shape
+    k = k_pool[block_tables]            # (B, nb, block, K, dh)
+    v = v_pool[block_tables]
+    k = k.reshape(B, -1, K, dh)
+    v = v.reshape(B, -1, K, dh)
+    out = decode_attention(q[:, None], k, v, lens - 1)
+    return out[:, 0]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the WKV6 kernel (the model's own scan)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rwkv import _wkv6_scan
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B, T, H, dh); u: (H, dh).  Returns (B, T, H, dh) f32."""
+    B = r.shape[0]
+    out, _ = _wkv6_scan(r, k, v, w, u,
+                        jnp.zeros((B, r.shape[2], r.shape[3], v.shape[3]),
+                                  jnp.float32))
+    return out

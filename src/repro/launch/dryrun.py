@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any other import (jax locks the device
+# count on first init).  Do not set this flag anywhere else in the repo.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config, load_all      # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch.specs import SHAPES, cell_supported, input_specs  # noqa: E402
+from repro.models import lm                                    # noqa: E402
+from repro.models.sharding import ShardingEnv                  # noqa: E402
+
+# --- TPU v5e hardware constants (targets; container runs CPU) -------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+HBM_GB = 16.0                # v5e HBM per chip
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+          "u64": 8}
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[m.group(1)]
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved by collectives, parsed from optimized HLO.
+
+    For each collective op we take the largest shape literal on the line
+    (the full tensor involved).  all-reduce counts 2x (reduce-scatter +
+    all-gather ring phases).  ``-done`` lines of async pairs are skipped.
+    NOTE: ops inside while-loop bodies are counted once — use the
+    reduced-depth unrolled compiles for per-layer extrapolation.
+    """
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in _COLL_KINDS:
+            if (f" {kind}(" in s or f" {kind}-start(" in s) \
+                    and f"{kind}-done" not in s:
+                sizes = [_shape_bytes(m) for m in _SHAPE_RE.finditer(s)]
+                if sizes:
+                    out[kind] += max(sizes)
+                    counts[kind] += 1
+                break
+    total = sum(v * (2 if k == "all-reduce" else 1) for k, v in out.items())
+    return {"by_kind": out, "counts": counts, "weighted_total": total}
+
+
+def make_step_fn(cfg, env, kind: str, seq: int):
+    if kind == "train":
+        from repro.train.optimizer import adamw_update
+
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.forward_train(p, batch, cfg, env))(params)
+            params, opt, gnorm = adamw_update(params, grads, opt)
+            return loss, gnorm, params, opt
+        return train_step
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return lm.prefill(params, batch, cfg, env, max_len=seq)
+        return prefill_step
+
+    def serve_step(params, tokens, cache, pos):
+        return lm.decode_step(params, tokens, cache, pos, cfg, env)
+    return serve_step
+
+
+def _compile_once(cfg, shape_name, mesh, opts):
+    env = ShardingEnv(mesh, opts=opts)
+    info = SHAPES[shape_name]
+    spec = input_specs(cfg, shape_name, env)
+    fn = make_step_fn(cfg, env, spec["kind"], info["seq"])
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=spec["in_shardings"],
+                         out_shardings=spec.get("out_shardings"),
+                         donate_argnums=spec.get("donate_argnums", ()))
+        lowered = jitted.lower(*spec["args"])
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    return {
+        "compile_s": round(dt, 1),
+        "memory": compiled.memory_analysis(),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": collective_bytes(compiled.as_text()),
+        "kind": spec["kind"],
+    }
+
+
+# --- depth reduction for per-layer slope measurement -----------------------
+def _depth_points(cfg):
+    if cfg.attn_period:                       # jamba: whole superblocks
+        return [(cfg.attn_period, cfg.attn_period),
+                (2 * cfg.attn_period, 2 * cfg.attn_period)]
+    if cfg.enc_dec:                           # enc=dec=k; L = 2k
+        return [(1, 2), (2, 4)]
+    return [(1, 1), (2, 2)]
+
+
+def _reduce_cfg(cfg, k):
+    if cfg.enc_dec:
+        return dataclasses.replace(cfg, n_enc_layers=k, n_dec_layers=k,
+                                   n_layers=2 * k)
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+def _full_depth(cfg) -> int:
+    return (cfg.n_enc_layers + cfg.n_dec_layers) if cfg.enc_dec \
+        else cfg.n_layers
+
+
+def run_cell(arch: str, shape_name: str, mesh, opts: dict, *,
+             slopes: bool = True):
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": why}
+    info = SHAPES[shape_name]
+    opts = dict(opts, remat=(info["kind"] == "train"))
+
+    # 1) full-depth scan compile: THE lower+compile proof + memory picture
+    full = _compile_once(cfg, shape_name, mesh,
+                         dict(opts, unroll_layers=False))
+    mem = full["memory"]
+    peak_gb = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+               mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30
+
+    result = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "kind": full["kind"], "mesh": list(mesh.devices.shape),
+        "axis_names": list(mesh.axis_names),
+        "n_chips": int(mesh.devices.size), "opts": dict(opts),
+        "compile_s": full["compile_s"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gb": round(peak_gb, 3),
+            "fits_hbm_16gb": bool(peak_gb <= HBM_GB),
+        },
+        "scan_cost_raw": {"flops": full["flops"], "bytes": full["bytes"],
+                          "collectives": full["collectives"]},
+    }
+
+    # 2) reduced-depth UNROLLED compiles -> exact per-layer slopes
+    #    (XLA cost analysis counts while bodies once; unrolling the layer
+    #     loop at two depths and extrapolating restores exact accounting)
+    if slopes:
+        (k1, l1), (k2, l2) = _depth_points(cfg)
+        slope_opts = dict(opts, unroll_layers=True, unroll_pairs=True,
+                          attn_block=2048)
+        r1 = _compile_once(_reduce_cfg(cfg, k1), shape_name, mesh,
+                           slope_opts)
+        r2 = _compile_once(_reduce_cfg(cfg, k2), shape_name, mesh,
+                           slope_opts)
+        L = _full_depth(cfg)
+
+        def extrap(a, b):
+            return a + (b - a) / (l2 - l1) * (L - l1)
+
+        flops = extrap(r1["flops"], r2["flops"])
+        bytes_acc = extrap(r1["bytes"], r2["bytes"])
+        coll_total = extrap(r1["collectives"]["weighted_total"],
+                            r2["collectives"]["weighted_total"])
+        coll_kind = {k: extrap(r1["collectives"]["by_kind"][k],
+                               r2["collectives"]["by_kind"][k])
+                     for k in _COLL_KINDS}
+        result["slope_compile_s"] = [r1["compile_s"], r2["compile_s"]]
+        result["slope_depths"] = [l1, l2]
+
+        t_compute = flops / PEAK_FLOPS
+        t_memory = bytes_acc / HBM_BW
+        t_coll = coll_total / ICI_BW
+        dominant = max([("compute", t_compute), ("memory", t_memory),
+                        ("collective", t_coll)], key=lambda kv: kv[1])[0]
+
+        total, active = cfg.param_counts()
+        total += cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        B, S = info["batch"], info["seq"]
+        if full["kind"] == "train":
+            model_flops = 6 * active * B * S
+        elif full["kind"] == "prefill":
+            model_flops = 2 * active * B * S
+        else:
+            model_flops = 2 * active * B
+        mf_chip = model_flops / mesh.devices.size
+
+        result.update({
+            "hlo_flops_per_device": flops,
+            "hlo_bytes_per_device": bytes_acc,
+            "collective_bytes_per_device": coll_total,
+            "collectives_by_kind": coll_kind,
+            "roofline": {
+                "compute_s": t_compute, "memory_s": t_memory,
+                "collective_s": t_coll, "dominant": dominant,
+                "step_lower_bound_s": max(t_compute, t_memory, t_coll),
+            },
+            "model_flops_per_chip": mf_chip,
+            "useful_flops_ratio": (mf_chip / flops) if flops else 0.0,
+            "params_total": total, "params_active": active,
+        })
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all",
+                    help="one of %s or 'all'" % list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--attn-mode", default="full", choices=["full", "tri"])
+    ap.add_argument("--moe-impl", default="ep", choices=["ep", "dense"])
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "dots"])
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="serving mode: weights replicated over 'data' "
+                         "(TP-only) — no FSDP gathers")
+    ap.add_argument("--cache-2d", action="store_true",
+                    help="shard KV-cache sequence over (model x data)")
+    ap.add_argument("--rs-matmul", action="store_true",
+                    help="explicit psum_scatter out-projections "
+                         "(sequence-parallel reduce-scatter)")
+    ap.add_argument("--serve-fullshard", action="store_true",
+                    help="decode mode: batch replicated, KV sharded over "
+                         "(model x data), weights fully sharded — no "
+                         "weight gathers for >100B archs")
+    ap.add_argument("--no-slopes", action="store_true",
+                    help="skip reduced-depth slope compiles (multi-pod "
+                         "pass only proves sharding)")
+    args = ap.parse_args()
+
+    load_all()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_tag = "multi" if multi else "single"
+        slopes = not args.no_slopes and not multi   # roofline: single-pod
+        opts = {"attn_mode": args.attn_mode, "moe_impl": args.moe_impl,
+                "sp": not args.no_sp,
+                "remat_policy": args.remat_policy,
+                "fsdp": not args.no_fsdp,
+                "rs_matmul": args.rs_matmul,
+                "cache_2d": args.cache_2d,
+                "serve_fullshard": args.serve_fullshard}
+        for arch in archs:
+            for shape in shapes:
+                fname = outdir / f"{args.tag}.{arch}.{shape}.{mesh_tag}.json"
+                if fname.exists() and not args.force:
+                    print(f"[skip-existing] {fname}", flush=True)
+                    continue
+                print(f"=== {arch} x {shape} x {mesh_tag} ===", flush=True)
+                t0 = time.time()
+                try:
+                    res = run_cell(arch, shape, mesh, opts, slopes=slopes)
+                except Exception as e:  # record failures, keep sweeping
+                    res = {"arch": arch, "shape": shape, "status": "error",
+                           "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                res["mesh_tag"] = mesh_tag
+                res["tag"] = args.tag
+                res["wall_s"] = round(time.time() - t0, 1)
+                fname.write_text(json.dumps(res, indent=1))
+                if res["status"] == "ok" and "roofline" in res:
+                    r = res["roofline"]
+                    print(f"  mem={res['memory']['peak_per_device_gb']}GB "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"hbm={r['memory_s']:.4f}s "
+                          f"ici={r['collective_s']:.4f}s "
+                          f"dom={r['dominant']} "
+                          f"useful={res['useful_flops_ratio']:.2f} "
+                          f"wall={res['wall_s']}s", flush=True)
+                elif res["status"] == "ok":
+                    print(f"  compiled ok; mem="
+                          f"{res['memory']['peak_per_device_gb']}GB "
+                          f"wall={res['wall_s']}s", flush=True)
+                else:
+                    print(f"  {res['status']}: "
+                          f"{res.get('reason', res.get('error'))}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

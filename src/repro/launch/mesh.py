@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devices)} "
+            "present — run under XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 (see launch/dryrun.py)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_worker_mesh(n_devices: int = 1, tp: int = 1):
+    """Small mesh for the serving engine / CPU tests."""
+    devices = jax.devices()[:n_devices]
+    dp = max(1, n_devices // tp)
+    return jax.make_mesh((dp, tp), ("data", "model"), devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

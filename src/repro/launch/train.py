@@ -1,0 +1,92 @@
+"""Training launcher: FSDP+TP train loop with checkpoint/restart.
+
+Runs for real on CPU with small configs (examples/train_small.py) and
+lowers unchanged on the production mesh (launch/dryrun.py exercises the
+identical train_step for every assigned arch).  Fault tolerance:
+periodic checkpoints + data-cursor persistence; on restart the loop
+resumes at the exact batch after the last checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, load_all
+from repro.models import lm
+from repro.models.sharding import ShardingEnv
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import OptState, adamw_update, init_opt_state
+
+
+def make_train_step(cfg, env, lr: float):
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.forward_train(p, batch, cfg, env))(params)
+        params, opt, gnorm = adamw_update(params, grads, opt, lr=lr)
+        return loss, gnorm, params, opt
+    return train_step
+
+
+def train_loop(arch: str = "small-100m", *, steps: int = 50, batch: int = 8,
+               seq: int = 128, lr: float = 3e-4, ckpt_dir: Optional[str] = None,
+               ckpt_every: int = 25, mesh=None, log_every: int = 5,
+               resume: bool = False, seed: int = 0):
+    load_all()
+    cfg = get_config(arch)
+    env = ShardingEnv(mesh, opts={"remat": False, "sp": mesh is not None,
+                                  "moe_impl": "dense" if mesh is None
+                                  else "ep"})
+    data = SyntheticLM(cfg, batch, seq, seed=seed)
+
+    start = 0
+    if resume and ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        ap = lm.abstract_params(cfg)
+        from repro.train.optimizer import abstract_opt_state
+        start, params, opt, meta = ckpt.restore_checkpoint(
+            ckpt_dir, ap, abstract_opt_state(ap))
+        data.restore(meta["data_state"])
+        print(f"[train] resumed from step {start}")
+    else:
+        params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+        opt = init_opt_state(params)
+
+    step_fn = jax.jit(make_train_step(cfg, env, lr), donate_argnums=(0, 1))
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        b = data.next()
+        batch_dev = {k: jnp.asarray(v) for k, v in b.items()}
+        loss, gnorm, params, opt = step_fn(params, opt, batch_dev)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step:4d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save_checkpoint(ckpt_dir, step + 1, params, opt,
+                                 data_state=data.snapshot())
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="small-100m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    train_loop(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+               lr=args.lr, ckpt_dir=args.ckpt_dir, resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

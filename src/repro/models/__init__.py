@@ -1,0 +1,13 @@
+"""JAX model zoo: init / forward / prefill / decode for all 10 assigned
+architectures plus the paper's Llama-3-70B serving model."""
+from repro.models.lm import (abstract_cache, abstract_params, cache_pspecs,
+                             decode_step, forward_logits, forward_train,
+                             init_cache, init_params, param_rules,
+                             param_shardings, prefill)
+from repro.models.sharding import ShardingEnv
+
+__all__ = [
+    "abstract_cache", "abstract_params", "cache_pspecs", "decode_step",
+    "forward_logits", "forward_train", "init_cache", "init_params",
+    "param_rules", "param_shardings", "prefill", "ShardingEnv",
+]

@@ -1,0 +1,210 @@
+"""Encoder-decoder assembly (seamless-m4t): speech encoder over precomputed
+frame embeddings (frontend STUB per assignment) + text decoder with
+cross-attention.  Decode serving state = self-KV cache + frozen cross-KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import layer_scan as lm_layer_scan
+from repro.models import layers as L
+from repro.models.sharding import ShardingEnv
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    from repro.models.lm import _dense, _init_attn, _init_ffn, _keys, _stack
+    d = cfg.d_model
+    k_emb, k_un, k_enc, k_dec = _keys(key, 4)
+    params: Dict[str, Any] = {
+        "embed": _dense(k_emb, (cfg.vocab, d)),
+        "unembed": _dense(k_un, (d, cfg.vocab)),
+        "enc_norm": jnp.ones((d,), BF16),
+        "final_norm": jnp.ones((d,), BF16),
+    }
+    enc = []
+    for i in range(cfg.n_enc_layers):
+        kk = jax.random.fold_in(k_enc, i)
+        enc.append({
+            "ln1": jnp.ones((d,), BF16), "ln2": jnp.ones((d,), BF16),
+            "attn": _init_attn(jax.random.fold_in(kk, 0), cfg),
+            "mlp": _init_ffn(jax.random.fold_in(kk, 1), cfg),
+        })
+    dec = []
+    for i in range(cfg.n_dec_layers):
+        kk = jax.random.fold_in(k_dec, i)
+        dec.append({
+            "ln1": jnp.ones((d,), BF16),
+            "ln_cross": jnp.ones((d,), BF16),
+            "ln2": jnp.ones((d,), BF16),
+            "attn": _init_attn(jax.random.fold_in(kk, 0), cfg),
+            "cross": _init_attn(jax.random.fold_in(kk, 1), cfg),
+            "mlp": _init_ffn(jax.random.fold_in(kk, 2), cfg),
+        })
+    params["enc_layers"] = _stack(enc)
+    params["dec_layers"] = _stack(dec)
+    return params
+
+
+def _run_encoder(params, frames, cfg, env: ShardingEnv, train=False):
+    from repro.models.lm import _maybe_remat, _res_cs
+    x = frames.astype(BF16)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = _res_cs(x, env, env.opts.get("sp", True))
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, _, _ = L.gqa_attention_full(
+            h, lp["attn"], cfg, env, positions, causal=False,
+            attn_mode=env.opts.get("attn_mode", "full"), bwd_safe=train)
+        x = _res_cs(x + y, env, env.opts.get("sp", True))
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = _res_cs(x + L.ffn_swiglu(h, lp["mlp"], env), env,
+                    env.opts.get("sp", True))
+        return x, None
+
+    from repro.models.lm import layer_scan
+    x, _ = layer_scan(_maybe_remat(body, env), x, params["enc_layers"], env)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp_cross, enc_out, cfg, env):
+    """Project encoder output into per-layer cross K/V."""
+    k = jnp.einsum("bsd,dkx->bskx", enc_out, lp_cross["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", enc_out, lp_cross["wv"])
+    return k, v
+
+
+def _decoder_block(x, lp, cfg, env, positions, enc_out, *, collect=False,
+                   train=False):
+    from repro.models.lm import _res_cs
+    sp = env.opts.get("sp", True)
+    attn_mode = env.opts.get("attn_mode", "full")
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, sk, sv = L.gqa_attention_full(h, lp["attn"], cfg, env, positions,
+                                     attn_mode=attn_mode, bwd_safe=train)
+    x = _res_cs(x + y, env, sp)
+    h = L.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+    ck, cv = _cross_kv(lp["cross"], enc_out, cfg, env)
+    y, _, _ = L.gqa_attention_full(h, lp["cross"], cfg, env, positions,
+                                   causal=False, kv_override=(ck, cv),
+                                   attn_mode=attn_mode, bwd_safe=train)
+    x = _res_cs(x + y, env, sp)
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = _res_cs(x + L.ffn_swiglu(h, lp["mlp"], env), env, sp)
+    if collect:
+        cs = env.cs
+        bt = env.batch_axes
+        return x, (cs(sk, bt, "model", None, None),
+                   cs(sv, bt, "model", None, None),
+                   cs(ck, bt, "model", None, None),
+                   cs(cv, bt, "model", None, None))
+    return x, None
+
+
+def forward_train(params, batch, cfg, env: ShardingEnv):
+    from repro.models.lm import _maybe_remat, chunked_xent
+    enc_out = _run_encoder(params, batch["frames"], cfg, env, train=True)
+    x = jnp.take(params["embed"], batch["tgt_tokens"], axis=0)
+    St = x.shape[1]
+    positions = jnp.arange(St, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        return _decoder_block(x, lp, cfg, env, positions, enc_out,
+                              train=True)
+
+    x, _ = lm_layer_scan(_maybe_remat(body, env), x, params["dec_layers"], env)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return chunked_xent(params, x, batch["tgt_labels"], cfg, env)
+
+
+def forward_logits(params, batch, cfg, env: ShardingEnv):
+    from repro.models.lm import unembed
+    enc_out = _run_encoder(params, batch["frames"], cfg, env)
+    x = jnp.take(params["embed"], batch["tgt_tokens"], axis=0)
+    St = x.shape[1]
+    positions = jnp.arange(St, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        return _decoder_block(x, lp, cfg, env, positions, enc_out)
+
+    x, _ = lm_layer_scan(body, x, params["dec_layers"], env)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg)
+
+
+def init_cache(cfg, batch, max_len, dtype=BF16, src_len=None):
+    """Self-KV cache (decoder) + cross-KV (filled by prefill)."""
+    K, dh = cfg.n_kv_heads, cfg.head_dim
+    Ld = cfg.n_dec_layers
+    src_len = src_len or max_len
+    return {"k": jnp.zeros((Ld, batch, max_len, K, dh), dtype),
+            "v": jnp.zeros((Ld, batch, max_len, K, dh), dtype),
+            "cross_k": jnp.zeros((Ld, batch, src_len, K, dh), dtype),
+            "cross_v": jnp.zeros((Ld, batch, src_len, K, dh), dtype)}
+
+
+def prefill(params, batch, cfg, env: ShardingEnv,
+            max_len: Optional[int] = None):
+    """Encode source frames + prefill decoder over tgt prefix.
+
+    Returns (last_logits, cache) with cache =
+    {k, v (self), cross_k, cross_v}.
+    """
+    from repro.models.lm import _pad_seq, unembed
+    enc_out = _run_encoder(params, batch["frames"], cfg, env)
+    x = jnp.take(params["embed"], batch["tgt_tokens"], axis=0)
+    St = x.shape[1]
+    max_len = max_len or St
+    positions = jnp.arange(St, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        return _decoder_block(x, lp, cfg, env, positions, enc_out,
+                              collect=True)
+
+    x, ys = lm_layer_scan(body, x, params["dec_layers"], env)
+    sk, sv, ck, cv = ys
+    cache = {"k": _pad_seq(sk, max_len, 2), "v": _pad_seq(sv, max_len, 2),
+             "cross_k": ck, "cross_v": cv}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x[:, -1:, :], cfg), cache
+
+
+def decode_step(params, tokens, cache, pos, cfg, env: ShardingEnv):
+    from repro.models.lm import unembed
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B = x.shape[0]
+    Ss = cache["cross_k"].shape[2]
+
+    def body(x, xs):
+        lp, sk, sv, ck, cv = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, sk, sv = L.gqa_attention_decode(h, lp["attn"], cfg, env, sk, sv,
+                                           pos)
+        x = x + y
+        h = L.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhx->bshx", h, lp["cross"]["wq"])
+        q = L.apply_rope(q, jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None],
+                         cfg.rope_theta)
+        y = L.decode_attention(q, ck, cv, jnp.full((B,), Ss - 1))
+        y = jnp.einsum("bshx,hxd->bsd", y, lp["cross"]["wo"])
+        x = x + y
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.ffn_swiglu(h, lp["mlp"], env)
+        return x, (sk, sv)
+
+    x, ys = lm_layer_scan(body, x, (params["dec_layers"], cache["k"],
+                                    cache["v"], cache["cross_k"],
+                                    cache["cross_v"]), env)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ys
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), new_cache

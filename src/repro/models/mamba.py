@@ -1,0 +1,111 @@
+"""Mamba-1 selective-SSM layer (jamba's mixer) in pure jnp.
+
+Sequential lax.scan over time keeps the carry at (B, d_inner, d_state) —
+memory-light and SPMD-clean (everything TPs over d_inner on the 'model'
+axis).  The chunked-parallel Pallas kernel in ``repro.kernels.mamba_scan``
+is the single-device fast path; this module is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B,S,di); w: (di, k); left-padded causal depthwise conv."""
+    k = w.shape[1]
+    out = jnp.zeros_like(x, dtype=F32)
+    for j in range(k):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1], :]
+        out = out + xs.astype(F32) * w[:, j].astype(F32)
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def _ssm_scan(x, dt, Bc, Cc, A, D):
+    """x,dt: (B,S,di); Bc,Cc: (B,S,ds); A: (di,ds); D: (di,).
+
+    h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t ;  y_t = h_t·C_t + D⊙x_t
+    """
+    B, S, di = x.shape
+    ds = A.shape[1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt.astype(F32)[:, :, None] * A.astype(F32)[None])
+        dBx = (dtt * xt).astype(F32)[:, :, None] * bt.astype(F32)[:, None, :]
+        h = dA * h + dBx                                  # (B,di,ds)
+        y = jnp.einsum("bis,bs->bi", h, ct.astype(F32))
+        return h, y.astype(jnp.bfloat16)
+
+    from repro.models.layers import seq_scan
+    h0 = jnp.zeros((B, di, ds), dtype=F32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    hT, ys = seq_scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(F32) + \
+        x.astype(F32) * D.astype(F32)[None, None]
+    return y.astype(x.dtype), hT
+
+
+def mamba_layer(x, p, cfg, env, *, conv_state=None, ssm_state=None,
+                return_state: bool = False):
+    """Full-sequence mamba mixer.  x: (B,S,d) -> (B,S,d).
+
+    With ``return_state`` also returns (conv_state, ssm_state) for the
+    serving cache: conv_state (B, d_conv-1, di), ssm_state (B, di, ds).
+    """
+    B, S, d = x.shape
+    di = cfg.mamba_d_inner
+    ds = cfg.mamba_d_state
+    dtr = cfg.dt_rank
+
+    xz = x @ p["in_proj"]
+    xr, z = xz[..., :di], xz[..., di:]
+    xr = env.cs(xr, env.batch_axes, None, "model")
+    if conv_state is not None:
+        xr_in = jnp.concatenate([conv_state.astype(xr.dtype), xr], axis=1)
+        xr_c = _causal_depthwise_conv(xr_in, p["conv_w"], p["conv_b"])
+        xr_c = xr_c[:, conv_state.shape[1]:, :]
+    else:
+        xr_c = _causal_depthwise_conv(xr, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xr_c)
+
+    dbc = xc @ p["x_proj"]                     # (B,S,dtr+2ds)
+    dt = jax.nn.softplus(dbc[..., :dtr] @ p["dt_w"] + p["dt_b"])
+    Bc = dbc[..., dtr:dtr + ds]
+    Cc = dbc[..., dtr + ds:]
+    A = -jnp.exp(p["A_log"].astype(F32))
+
+    if ssm_state is not None:
+        # decode: S is tiny (1); fold carried state in by running the scan
+        # from the provided h0.
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            dA = jnp.exp(dtt.astype(F32)[:, :, None] * A[None])
+            dBx = (dtt * xt).astype(F32)[:, :, None] * bt.astype(F32)[:, None, :]
+            h = dA * h + dBx
+            y = jnp.einsum("bis,bs->bi", h, ct.astype(F32))
+            return h, y
+        xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0),
+              jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+        hT, ys = lax.scan(step, ssm_state.astype(F32), xs)
+        y = jnp.moveaxis(ys, 0, 1) + xc.astype(F32) * p["D"].astype(F32)
+        y = y.astype(x.dtype)
+    else:
+        y, hT = _ssm_scan(xc, dt, Bc, Cc, A, p["D"])
+
+    y = (y.astype(F32) * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        k = cfg.mamba_d_conv - 1
+        if conv_state is not None:
+            tail = jnp.concatenate([conv_state.astype(xr.dtype), xr],
+                                   axis=1)[:, -k:, :]
+        else:
+            tail = jnp.pad(xr, ((0, 0), (max(0, k - S), 0), (0, 0)))[:, -k:, :]
+        return out, tail, hT
+    return out

@@ -1,0 +1,105 @@
+"""RWKV-6 "Finch" layer (data-dependent decay) in pure jnp.
+
+Time-mix (WKV6 recurrence) + channel-mix, both with token-shift and the
+ddlerp data-dependent interpolation [arXiv:2404.05892].  The sequential
+scan carries (B, H, dk, dv) state — exactly the serving-session state
+that SAGA schedules for attention-free archs.  ``repro.kernels.rwkv6``
+holds the chunked Pallas fast path; this module is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import group_norm_heads
+
+F32 = jnp.float32
+DDLERP_W = 32      # ddlerp lora width
+DECAY_W = 64       # decay lora width
+
+
+def _token_shift(x, last):
+    """Returns x_{t-1} with `last` (B,d) as the t=0 predecessor."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1, :])
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _wkv6_scan(r, k, v, w, u, state0):
+    """r,k,w: (B,S,H,dk); v: (B,S,H,dv); u: (H,dk); state0: (B,H,dk,dv)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,dk|dv)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,dk,dv)
+        out = ((S + u[None, :, :, None] * kv) * rt[..., :, None]).sum(axis=-2)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    from repro.models.layers import seq_scan
+    xs = tuple(jnp.moveaxis(t.astype(F32), 1, 0) for t in (r, k, v, w))
+    S_T, outs = seq_scan(step, state0.astype(F32), xs)
+    return jnp.moveaxis(outs, 0, 1), S_T           # (B,S,H,dv), (B,H,dk,dv)
+
+
+def rwkv6_time_mix(x, p, cfg, env, *, shift_state=None, wkv_state=None,
+                   return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.rwkv_n_heads
+    hs = cfg.rwkv_head_size
+
+    xprev = _token_shift(x, shift_state)
+    dx = (xprev - x).astype(F32)
+    xf = x.astype(F32)
+
+    xxx = xf + dx * p["maa_x"].astype(F32)
+    kk = jnp.tanh(xxx @ p["maa_w1"].astype(F32))            # (B,S,5W)
+    kk = kk.reshape(B, S, 5, DDLERP_W)
+    mix = jnp.einsum("bsfw,fwd->fbsd", kk, p["maa_w2"].astype(F32))
+    mw, mk, mv, mr, mg = mix[0], mix[1], mix[2], mix[3], mix[4]
+
+    xw = (xf + dx * (p["maa_w"].astype(F32) + mw)).astype(x.dtype)
+    xk = (xf + dx * (p["maa_k"].astype(F32) + mk)).astype(x.dtype)
+    xv = (xf + dx * (p["maa_v"].astype(F32) + mv)).astype(x.dtype)
+    xr = (xf + dx * (p["maa_r"].astype(F32) + mr)).astype(x.dtype)
+    xg = (xf + dx * (p["maa_g"].astype(F32) + mg)).astype(x.dtype)
+
+    r = (xr @ p["Wr"]).reshape(B, S, H, hs)
+    k = (xk @ p["Wk"]).reshape(B, S, H, hs)
+    v = (xv @ p["Wv"]).reshape(B, S, H, hs)
+    g = jax.nn.silu((xg @ p["Wg"]).astype(F32))
+
+    dec = p["decay"].astype(F32) + \
+        jnp.tanh(xw.astype(F32) @ p["decay_w1"].astype(F32)) @ \
+        p["decay_w2"].astype(F32)                            # (B,S,d)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, hs)
+
+    r = env.cs(r, env.batch_axes, None, "model", None)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, hs, hs), dtype=F32)
+    out, S_T = _wkv6_scan(r, k, v, w, p["faaaa"].astype(F32), wkv_state)
+
+    out = group_norm_heads(out.reshape(B, S, d), p["ln_x"], H, cfg.norm_eps)
+    out = (out.astype(F32) * g).astype(x.dtype)
+    y = out @ p["Wo"]
+    if return_state:
+        return y, x[:, -1, :], S_T
+    return y
+
+
+def rwkv6_channel_mix(x, p, cfg, env, *, shift_state=None,
+                      return_state: bool = False):
+    xprev = _token_shift(x, shift_state)
+    dx = (xprev - x).astype(F32)
+    xf = x.astype(F32)
+    xk = (xf + dx * p["cmix_maa_k"].astype(F32)).astype(x.dtype)
+    xr = (xf + dx * p["cmix_maa_r"].astype(F32)).astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["Wck"]))
+    h = env.cs(h, env.batch_axes, None, "model")
+    v = h @ p["Wcv"]
+    y = (jax.nn.sigmoid((xr @ p["Wcr"]).astype(F32)) * v.astype(F32)
+         ).astype(x.dtype)
+    if return_state:
+        return y, x[:, -1, :]
+    return y

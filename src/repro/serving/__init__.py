@@ -1,0 +1,2 @@
+"""Real-JAX serving engine: paged KV pool, continuous batching, sessions,
+multi-worker server under the SAGA coordinator."""

@@ -1,0 +1,107 @@
+"""Paged KV cache pool (vLLM's PagedAttention adapted to TPU/JAX).
+
+The pool is a pair of device arrays
+    k_pool, v_pool: (L, num_blocks, block_size, K, dh)
+plus host-side block tables {session -> [block ids]}.  Eviction and TTL
+never touch device memory — they only mutate the table + free list,
+exactly like the paper's WA-LRU over PagedAttention blocks.  The Pallas
+paged-decode kernel (repro.kernels.paged_attention) consumes this layout
+on TPU; the CPU engine gathers blocks into contiguous caches.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedKVPool:
+    def __init__(self, n_layers: int, num_blocks: int, block_size: int,
+                 n_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        self.L = n_layers
+        self.num_blocks = num_blocks
+        self.block = block_size
+        self.K = n_kv_heads
+        self.dh = head_dim
+        shape = (n_layers, num_blocks, block_size, n_kv_heads, head_dim)
+        self.k_pool = jnp.zeros(shape, dtype)
+        self.v_pool = jnp.zeros(shape, dtype)
+        self.free: List[int] = list(range(num_blocks))
+        self.tables: Dict[str, List[int]] = {}
+        self.lens: Dict[str, int] = {}
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def bytes_per_block(self) -> int:
+        return int(2 * self.L * self.block * self.K * self.dh * 2)
+
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self.free)
+
+    def session_bytes(self, sid: str) -> int:
+        return len(self.tables.get(sid, [])) * self.bytes_per_block
+
+    def has(self, sid: str) -> bool:
+        return sid in self.tables
+
+    # -- alloc/free --------------------------------------------------------
+    def _blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block)
+
+    def can_fit(self, tokens: int) -> bool:
+        return self._blocks_for(tokens) <= len(self.free)
+
+    def free_session(self, sid: str) -> int:
+        blocks = self.tables.pop(sid, [])
+        self.lens.pop(sid, None)
+        self.free.extend(blocks)
+        return len(blocks)
+
+    # -- park / resume -------------------------------------------------------
+    def park(self, sid: str, k: jnp.ndarray, v: jnp.ndarray,
+             n_tokens: int) -> bool:
+        """Store a session's contiguous KV (L, S, K, dh) into pool blocks.
+        Returns False (caller must evict) if no space."""
+        n_tokens = int(n_tokens)
+        nb = self._blocks_for(n_tokens)
+        if sid in self.tables:
+            self.free_session(sid)
+        if nb > len(self.free):
+            return False
+        blocks = [self.free.pop() for _ in range(nb)]
+        pad = nb * self.block - n_tokens
+        if pad:
+            k = jnp.pad(k[:, :n_tokens], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v[:, :n_tokens], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            k = k[:, :n_tokens]
+            v = v[:, :n_tokens]
+        kb = k.reshape(self.L, nb, self.block, self.K, self.dh)
+        vb = v.reshape(self.L, nb, self.block, self.K, self.dh)
+        idx = jnp.asarray(blocks, jnp.int32)
+        self.k_pool = self.k_pool.at[:, idx].set(kb)
+        self.v_pool = self.v_pool.at[:, idx].set(vb)
+        self.tables[sid] = blocks
+        self.lens[sid] = n_tokens
+        return True
+
+    def resume(self, sid: str) -> Optional[Tuple[jnp.ndarray, jnp.ndarray,
+                                                 int]]:
+        """Gather a parked session back to contiguous (L, S, K, dh)."""
+        blocks = self.tables.get(sid)
+        if blocks is None:
+            return None
+        idx = jnp.asarray(blocks, jnp.int32)
+        k = self.k_pool[:, idx].reshape(self.L, -1, self.K, self.dh)
+        v = self.v_pool[:, idx].reshape(self.L, -1, self.K, self.dh)
+        n = self.lens[sid]
+        return k[:, :n], v[:, :n], n
+
+    def block_table_array(self, sid: str, max_blocks: int) -> np.ndarray:
+        """Padded int32 block table for the Pallas paged-decode kernel."""
+        blocks = self.tables.get(sid, [])
+        out = np.zeros((max_blocks,), np.int32)
+        out[:len(blocks)] = blocks
+        return out

@@ -1,0 +1,80 @@
+"""Checkpoint / restart for the training substrate.
+
+Saves the param + optimizer pytrees (np.savez, one file per host in a
+real deployment; single file here), the data-pipeline cursor, and the
+coordinator snapshot for serving-side state.  Restore rebuilds the exact
+pytree structure from the abstract tree, so a job restarted on a
+different mesh reshards transparently (arrays are saved unsharded;
+jax.device_put with the new NamedShardings redistributes).
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":     # npz cannot store bf16
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None,
+                    data_state: Optional[dict] = None,
+                    extra: Optional[dict] = None) -> str:
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    path = d / f"step_{step:08d}.npz"
+    arrays = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"opt/{k}": v
+                       for k, v in _flatten(opt_state).items()})
+    np.savez(path, **arrays)
+    meta = {"step": step, "data_state": data_state or {},
+            "extra": extra or {}}
+    (d / f"step_{step:08d}.json").write_text(json.dumps(meta))
+    (d / "LATEST").write_text(str(step))
+    return str(path)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    f = Path(ckpt_dir) / "LATEST"
+    if not f.exists():
+        return None
+    return int(f.read_text().strip())
+
+
+def restore_checkpoint(ckpt_dir: str, abstract_params, abstract_opt=None,
+                       step: Optional[int] = None
+                       ) -> Tuple[int, Any, Any, dict]:
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir)
+    data = np.load(d / f"step_{step:08d}.npz")
+    meta = json.loads((d / f"step_{step:08d}.json").read_text())
+
+    def rebuild(abstract, prefix):
+        paths = jax.tree_util.tree_flatten_with_path(abstract)
+        leaves = []
+        for path, leaf in paths[0]:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = data[f"{prefix}/{key}"]
+            leaves.append(np.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+    params = rebuild(abstract_params, "params")
+    opt = rebuild(abstract_opt, "opt") if abstract_opt is not None else None
+    return step, params, opt, meta

@@ -1,0 +1,70 @@
+"""AdamW in pure jax (f32 moments over bf16 params).
+
+Memory layout matches the FSDP+TP sharding of the params: moment trees
+reuse the param PartitionSpecs, so optimizer state is fully sharded
+(ZeRO-style) — required to fit the 236B-class archs in 16 GB HBM chips.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return OptState(mu=jax.tree_util.tree_map(zeros, params),
+                    nu=jax.tree_util.tree_map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(abstract_params) -> OptState:
+    return jax.eval_shape(init_opt_state, abstract_params)
+
+
+def opt_pspecs(param_shardings) -> OptState:
+    return OptState(mu=param_shardings, nu=param_shardings, step=None)
+
+
+def adamw_update(params, grads, opt: OptState, *, lr: float = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """One AdamW step.  Returns (new_params, new_opt, grad_norm)."""
+    gsq = sum(jnp.sum(jnp.square(g.astype(F32)))
+              for g in jax.tree_util.tree_leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    step = opt.step + 1
+    c1 = 1.0 - b1 ** step.astype(F32)
+    c2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(F32)
+        newp = (p.astype(F32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt.mu)
+    flat_v = jax.tree_util.tree_leaves(opt.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), gnorm

@@ -1,0 +1,85 @@
+"""Competitive-ratio harness tests (paper §7, Table 2)."""
+import random
+
+import pytest
+
+from repro.core.belady import Access, BeladyOracle, competitive_ratio, \
+    replay_policy
+from repro.core.ttl import ToolTTLPolicy
+from repro.core.walru import EvictionWeights, LRUCache, PrefixLRUCache, \
+    WALRUCache
+from repro.core.aeg import AEG, ToolStats
+
+
+def _agent_trace(n_tasks=20, steps=8, seed=0, entry_bytes=10.0,
+                 interleave=True):
+    """Interleaved multi-session workflow trace with growing contexts."""
+    rng = random.Random(seed)
+    events = []
+    for i in range(n_tasks):
+        t0 = rng.uniform(0, 50.0)
+        t = t0
+        for s in range(steps):
+            t += rng.uniform(0.1, 3.0)
+            tokens = 1000.0 + 600.0 * s
+            events.append(Access(
+                t=t, session=f"s{i}", tokens=tokens,
+                bytes_=entry_bytes * (1 + s), node_id=s,
+                tool=rng.choice(["code_execution", "web_api"]),
+                last=(s == steps - 1), prefix_tokens=300.0))
+    events.sort(key=lambda a: a.t)
+    return events
+
+
+def _mk_walru(capacity, trace):
+    """WA-LRU wired with an oracle-ish AEG reuse signal."""
+    aeg = AEG.linear_chain(["code_execution"] * 9, p_term=0.02)
+    stats = ToolStats()
+    stats.observe("code_execution", 500, 0.3)
+    stats.observe("web_api", 500, 1.0)
+    sessions_alive = {a.session for a in trace if not a.last}
+
+    def p_reuse(entry):
+        if entry.completed:
+            return 0.0
+        return aeg.p_reuse(min(entry.node_id, 8), entry.tokens, stats)
+
+    return WALRUCache(capacity, EvictionWeights(), p_reuse_fn=p_reuse)
+
+
+@pytest.mark.parametrize("capacity", [120.0, 250.0])
+def test_cr_at_least_one(capacity):
+    trace = _agent_trace()
+    opt = BeladyOracle(capacity).replay(trace)
+    for cache in [_mk_walru(capacity, trace), LRUCache(capacity)]:
+        cost = replay_policy(trace, cache, ttl_policy=ToolTTLPolicy())
+        assert competitive_ratio(cost, opt) >= 1.0 - 1e-9
+
+
+def test_walru_beats_lru_on_workflow_traces():
+    trace = _agent_trace(n_tasks=30, steps=10, seed=1)
+    capacity = 400.0
+    opt = BeladyOracle(capacity).replay(trace)
+    wal = replay_policy(trace, _mk_walru(capacity, trace),
+                        ttl_policy=ToolTTLPolicy())
+    lru = replay_policy(trace, LRUCache(capacity))
+    assert wal <= lru
+    # WA-LRU within a small factor of OPT on workflow traces (Thm 3)
+    assert competitive_ratio(wal, opt) < competitive_ratio(lru, opt) + 1e-9
+
+
+def test_prefix_cache_between_lru_and_walru():
+    trace = _agent_trace(n_tasks=30, steps=10, seed=2)
+    capacity = 400.0
+    lru = replay_policy(trace, LRUCache(capacity))
+    prefix = replay_policy(trace, PrefixLRUCache(capacity))
+    assert prefix <= lru                     # radix prefix always helps
+
+
+def test_belady_zero_cost_when_everything_fits():
+    trace = _agent_trace(n_tasks=5, steps=4)
+    opt = BeladyOracle(1e9).replay(trace)
+    # only cold-start prefills (first access per session)
+    first_costs = sum(a.tokens for a in trace
+                      if a.node_id == 0)
+    assert opt == pytest.approx(first_costs)

@@ -1,0 +1,287 @@
+"""Unit tests for SAGA's core mechanisms (paper equations + algorithms)."""
+import math
+
+import pytest
+
+from repro.core.aeg import AEG, PatternInferencer, ToolStats
+from repro.core.affinity import SessionRouter
+from repro.core.afs import AFSScheduler, TaskProgress
+from repro.core.belady import Access, BeladyOracle, competitive_ratio, \
+    replay_policy
+from repro.core.coordinator import GlobalCoordinator, SAGAConfig
+from repro.core.prefetch import SpeculativePrefetcher
+from repro.core.stealing import WorkStealer
+from repro.core.ttl import ToolTTLPolicy, fit_lognormal, memory_pressure, \
+    percentile
+from repro.core.walru import CacheEntry, EvictionWeights, LRUCache, \
+    WALRUCache
+
+
+# --- AEG (Eq. 4-5) ----------------------------------------------------------
+def test_aeg_linear_chain_structure():
+    aeg = AEG.linear_chain(["a", "b", "c"], p_term=0.1)
+    assert aeg.most_likely_successor(0) == 1
+    assert aeg.successors(0)[0][1] == pytest.approx(0.9)
+    assert aeg.successors(2) == []          # chain end
+
+
+def test_overlap_eq5():
+    aeg = AEG.linear_chain(["code_execution"] * 3)
+    stats = ToolStats()
+    stats.observe("code_execution", 500, 0.2)
+    # overlap = n_cur / (n_cur + E[n_obs])
+    assert aeg.overlap(1000, 1, stats) == pytest.approx(1000 / 1500)
+    assert aeg.overlap(0, 1, stats) == 0.0
+
+
+def test_p_reuse_monotone_in_context():
+    aeg = AEG.linear_chain(["a"] * 4, p_term=0.05)
+    stats = ToolStats()
+    stats.observe("a", 400, 0.1)
+    assert aeg.p_reuse(0, 8000, stats) > aeg.p_reuse(0, 500, stats)
+    assert 0.0 <= aeg.p_reuse(0, 8000, stats) <= 1.0
+
+
+def test_retry_edges():
+    aeg = AEG.linear_chain(["a", "b", "c"], p_term=0.0,
+                           retry_probs={1: 0.3})
+    succs = dict(aeg.successors(1))
+    assert succs[2] == pytest.approx(0.7)
+    assert succs[0] == pytest.approx(0.3)
+
+
+# --- pattern inference (§3.3) -----------------------------------------------
+def test_pattern_inference_cold_start():
+    inf = PatternInferencer(min_tasks=5)
+    for _ in range(4):
+        inf.record_trace(["a", "b"])
+    assert not inf.warm
+    assert inf.infer("a") is None           # tier (c) fallback
+    inf.record_trace(["a", "b"])
+    assert inf.warm
+    assert inf.infer("a") is not None
+
+
+def test_pattern_inference_accuracy():
+    inf = PatternInferencer(min_tasks=1)
+    for _ in range(20):
+        inf.record_trace(["a", "b", "a", "b"])
+    assert inf.predict_next("a") == "b"
+    acc = inf.accuracy([["a", "b", "a", "b"]])
+    assert acc >= 0.75
+
+
+# --- WA-LRU (Eq. 1-3) ---------------------------------------------------------
+def _entry(sid, size, t_last, **kw):
+    return CacheEntry(session_id=sid, size_bytes=size, t_last=t_last, **kw)
+
+
+def test_p_evict_weights():
+    c = WALRUCache(100.0, EvictionWeights(0.3, 0.5, 0.2),
+                   p_reuse_fn=lambda e: 1.0)
+    e = _entry("s", 50.0, 0.0)
+    # full reuse, max recency, half size
+    v = c.p_evict(e, now=10.0, tau_max=10.0, size_max=100.0)
+    assert v == pytest.approx(0.3 * 1.0 + 0.5 * 0.0 + 0.2 * 0.5)
+
+
+def test_walru_prefers_evicting_completed_sessions():
+    c = WALRUCache(100.0, p_reuse_fn=lambda e: 0.9)
+    c.insert(_entry("active", 50.0, 9.0), now=9.0)
+    done = _entry("done", 50.0, 9.5, completed=True)
+    c.insert(done, now=9.5)
+    victim = c.select_victim(now=10.0)
+    assert victim.session_id == "done"      # despite being more recent
+
+
+def test_walru_ttl_expiry_drops_reuse_bonus():
+    c = WALRUCache(100.0, p_reuse_fn=lambda e: 0.95)
+    fresh = _entry("fresh", 50.0, 0.0, ttl_deadline=100.0)
+    expired = _entry("expired", 50.0, 5.0, ttl_deadline=6.0)
+    c.insert(fresh, now=0.0)
+    c.insert(expired, now=5.0)
+    assert c.select_victim(now=50.0).session_id == "expired"
+
+
+def test_capacity_invariant():
+    c = WALRUCache(100.0)
+    for i in range(10):
+        c.insert(_entry(f"s{i}", 30.0, float(i)), now=float(i))
+        assert c.used <= 100.0
+
+
+def test_lru_baseline_evicts_oldest():
+    c = LRUCache(100.0)
+    c.insert(_entry("old", 40.0, 0.0), now=0.0)
+    c.insert(_entry("new", 40.0, 5.0), now=5.0)
+    assert c.select_victim(10.0).session_id == "old"
+
+
+# --- TTL (Algorithm 1 / Eq. 6) -------------------------------------------------
+def test_memory_pressure_eq6():
+    assert memory_pressure(0.5) == 0.0
+    assert memory_pressure(0.7) == 0.0
+    assert memory_pressure(0.8) == pytest.approx(0.5)
+    assert memory_pressure(0.95) == 1.0
+
+
+def test_ttl_percentile_and_cap():
+    pol = ToolTTLPolicy(p=95.0, ttl_max_s=300.0)
+    for v in [1.0] * 95 + [1000.0] * 5:
+        pol.observe("t", v)
+    assert pol.ttl("t", mem_pressure=0.0) <= 300.0   # TTL_max cap
+    for v in [1.0] * 100:
+        pol.observe("u", v)
+    assert pol.ttl("u", 0.0) == pytest.approx(1.0)
+    # pressure scaling: factor 1 - 0.5*m
+    assert pol.ttl("u", 1.0) == pytest.approx(0.5)
+
+
+def test_lognormal_fit():
+    import random
+    rng = random.Random(0)
+    xs = [math.exp(1.0 + 0.5 * rng.gauss(0, 1)) for _ in range(2000)]
+    mu, sigma = fit_lognormal(xs)
+    assert abs(mu - 1.0) < 0.05
+    assert abs(sigma - 0.5) < 0.05
+
+
+# --- affinity routing (Eq. 7) ---------------------------------------------------
+def test_eq7_routes_home_when_cached_and_underloaded():
+    r = SessionRouter(theta=0.8)
+    r.set_home("s", 2)
+    w = r.route("s", [0.9, 0.5, 0.5], cached=lambda w, s: w == 2)
+    assert w == 2
+
+
+def test_eq7_falls_back_when_overloaded():
+    r = SessionRouter(theta=0.8)
+    r.set_home("s", 2)
+    w = r.route("s", [0.3, 0.5, 0.9], cached=lambda w, s: w == 2)
+    assert w == 0                            # least-loaded fallback
+
+
+def test_eq7_falls_back_when_not_cached():
+    r = SessionRouter(theta=0.8)
+    r.set_home("s", 2)
+    w = r.route("s", [0.5, 0.2, 0.1], cached=lambda w, s: False)
+    assert w == 2 or w == 1  # least-loaded (2 is least but not cached)
+    assert w == 2  # loads[2]=0.1 is least loaded -> re-homed there
+
+
+# --- work stealing (§5.2) ---------------------------------------------------------
+def test_steal_requires_both_conditions():
+    ws = WorkStealer(t_idle_s=0.1, r_max=2.0)
+    ws.note_queue_state(0, empty=True, now=0.0)
+    # idle long enough but no overloaded victim
+    assert ws.maybe_steal(0.2, [0.0, 0.1], [[], []]) is None
+    # overloaded victim exists now
+    q = [(0.0, "sess")]
+    d = ws.maybe_steal(0.2, [0.0, 1.0], [[], q])
+    assert d is not None and d.victim == 1 and d.session_id == "sess"
+
+
+def test_steal_cooldown_prevents_thrash():
+    ws = WorkStealer(t_idle_s=0.0, migration_cooldown_s=10.0)
+    ws.note_queue_state(0, True, 0.0)
+    d1 = ws.maybe_steal(0.5, [0.0, 1.0], [[], [(0.0, "s")]])
+    assert d1 is not None
+    ws.note_queue_state(0, True, 0.6)
+    d2 = ws.maybe_steal(1.0, [0.0, 1.0], [[], [(0.0, "s")]])
+    assert d2 is None                        # safeguard (b)
+
+
+def test_stale_steal_rejected():
+    ws = WorkStealer()
+    from repro.core.stealing import StealDecision
+    assert not ws.accept(StealDecision(0, 1, "s"), victim_queue_len=0,
+                         now=1.0)            # safeguard (c)
+
+
+# --- AFS (Eq. 8-9, Thm 2) -----------------------------------------------------------
+def test_afs_prioritizes_urgent_tenants():
+    afs = AFSScheduler()
+    afs.add_task(TaskProgress("t1", "urgent", deadline=10.0,
+                              work_remain_s=9.0))
+    afs.add_task(TaskProgress("t2", "lazy", deadline=1000.0,
+                              work_remain_s=9.0))
+    shares = afs.recompute(now=0.0)
+    assert shares["urgent"] > shares["lazy"]
+    assert sum(shares.values()) == pytest.approx(1.0)
+
+
+def test_afs_preemption_rules():
+    afs = AFSScheduler(preempt_block_s=0.5)
+    afs.add_task(TaskProgress("hi", "a", deadline=5.0, work_remain_s=4.0))
+    afs.add_task(TaskProgress("lo", "b", deadline=500.0, work_remain_s=1.0))
+    afs.recompute(0.0)
+    afs.note_blocked("hi", now=0.0)
+    assert not afs.should_preempt("hi", "lo", now=0.3)   # too soon
+    assert afs.should_preempt("hi", "lo", now=0.6)
+
+
+def test_afs_restoring_drift():
+    """Thm 2's negative drift: an underserved tenant's share rises."""
+    afs = AFSScheduler()
+    afs.add_task(TaskProgress("t1", "behind", deadline=100.0,
+                              work_remain_s=50.0))
+    afs.add_task(TaskProgress("t2", "ahead", deadline=100.0,
+                              work_remain_s=50.0))
+    s0 = afs.recompute(0.0)
+    # 'ahead' receives service; 'behind' does not
+    afs.note_progress("t2", 30.0)
+    s1 = afs.recompute(10.0)
+    assert s1["behind"] > s1["ahead"]
+    assert s1["behind"] > s0["behind"] - 1e-9
+
+
+# --- prefetch (§4.3) -----------------------------------------------------------------
+def test_prefetch_argmax_successor_and_accounting():
+    pf = SpeculativePrefetcher(bandwidth_Bps=1e9)
+    aeg = AEG.linear_chain(["a", "b", "c"])
+    job = pf.maybe_issue("s", aeg, 0, 1e9, now=0.0, pool_used_frac=0.2)
+    assert job is not None and job.node_id == 1
+    assert job.ready_at == pytest.approx(1.0)
+    # resolved after ready and correct -> absorbed
+    assert pf.resolve("s", actual_node=1, now=2.0)
+    assert pf.correct == 1
+
+
+def test_prefetch_skips_under_pressure():
+    pf = SpeculativePrefetcher()
+    aeg = AEG.linear_chain(["a", "b"])
+    assert pf.maybe_issue("s", aeg, 0, 1e9, 0.0, pool_used_frac=0.97) is None
+
+
+# --- coordinator fault tolerance --------------------------------------------------------
+def test_worker_failure_drops_cache_and_affinity():
+    co = GlobalCoordinator(SAGAConfig(), 3, 1e9)
+    co.register_task("s", "t", ["a"] * 3, 100.0, 10.0, 0.0)
+    w = co.route("s", [0.1, 0.1, 0.1], 0.0)
+    co.on_step_start("s", w, 100, 0.0)
+    co.on_step_end("s", w, 200, 1000.0, "a", 1.0)
+    assert co.pools[w].contains("s")
+    lost = co.worker_failed(w)
+    assert "s" in lost
+    assert not co.pools[w].contains("s")
+    w2 = co.route("s", [0.1, 0.1, 0.1], 2.0)
+    assert w2 != w or co.alive[w]            # routed to a live worker
+
+
+def test_coordinator_snapshot_restore_roundtrip():
+    co = GlobalCoordinator(SAGAConfig(), 2, 1e9)
+    co.register_task("s", "t", ["a", "b"], 100.0, 10.0, 0.0)
+    co.on_step_end("s", 0, 200, 1000.0, "a", 1.0)
+    co.ttl.observe("a", 0.5)
+    snap = co.snapshot()
+    co2 = GlobalCoordinator(SAGAConfig(), 2, 1e9)
+    co2.restore(snap)
+    assert "s" in co2.sessions
+    assert co2.sessions["s"].node_id == co.sessions["s"].node_id
+    assert co2.ttl.hist["a"] == co.ttl.hist["a"]
+
+
+def test_elastic_add_worker():
+    co = GlobalCoordinator(SAGAConfig(), 2, 1e9)
+    w = co.add_worker()
+    assert w == 2 and len(co.pools) == 3 and co.alive[2]

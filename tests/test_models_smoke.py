@@ -1,0 +1,116 @@
+"""Per-arch smoke tests (deliverable f): REDUCED same-family configs run
+one forward/train step on CPU; output shapes + no NaNs.  Full configs
+are exercised only by the dry-run (ShapeDtypeStruct, no allocation)."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models as Mo
+from repro.models.sharding import ShardingEnv
+
+ARCH_MODULES = [
+    "jamba_v0_1_52b", "deepseek_v2_236b", "mixtral_8x22b",
+    "command_r_35b", "mistral_nemo_12b", "qwen3_32b", "llama3_2_3b",
+    "llava_next_34b", "rwkv6_7b", "seamless_m4t_large_v2",
+]
+
+ENV = ShardingEnv(None, opts={"remat": False, "sp": False,
+                              "moe_impl": "dense"})
+
+
+def _tiny(mod_name):
+    return importlib.import_module(f"repro.configs.{mod_name}").tiny()
+
+
+def _batch(cfg, B=2, S=16, key=None):
+    key = key or jax.random.PRNGKey(0)
+    if cfg.enc_dec:
+        return {"frames": jax.random.normal(
+                    key, (B, 24, cfg.d_model), jnp.bfloat16) * 0.02,
+                "tgt_tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+                "tgt_labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        return {"patches": jax.random.normal(
+                    key, (B, 8, cfg.d_model), jnp.bfloat16) * 0.02,
+                "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("mod", ARCH_MODULES)
+def test_forward_loss_finite(mod):
+    cfg = _tiny(mod)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    loss = Mo.forward_train(params, _batch(cfg), cfg, ENV)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{cfg.name} loss not finite"
+
+
+@pytest.mark.parametrize("mod", ARCH_MODULES)
+def test_train_step_no_nans(mod):
+    cfg = _tiny(mod)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: Mo.forward_train(p, batch, cfg, ENV))(params)
+    assert bool(jnp.isfinite(loss))
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), (cfg.name, path)
+
+
+@pytest.mark.parametrize("mod", ARCH_MODULES)
+def test_logits_shape(mod):
+    cfg = _tiny(mod)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = Mo.forward_logits(params, batch, cfg, ENV)
+    B = 2
+    if cfg.enc_dec:
+        S = batch["tgt_tokens"].shape[1]
+    elif cfg.family == "vlm":
+        S = batch["patches"].shape[1] + batch["tokens"].shape[1]
+    else:
+        S = batch["tokens"].shape[1]
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("mod", ARCH_MODULES)
+def test_prefill_decode_matches_full_forward(mod):
+    """Serving-path correctness: prefill(S-1) + decode(1) == forward(S)."""
+    cfg = _tiny(mod)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 12
+    if cfg.enc_dec:
+        frames = jax.random.normal(key, (B, 16, cfg.d_model),
+                                   jnp.bfloat16) * 0.02
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        full = Mo.forward_logits(params, {"frames": frames,
+                                          "tgt_tokens": toks}, cfg, ENV)
+        last, cache = Mo.prefill(params, {"frames": frames,
+                                          "tgt_tokens": toks[:, :S - 1]},
+                                 cfg, ENV, max_len=S + 2)
+    elif cfg.family == "vlm":
+        patches = jax.random.normal(key, (B, 8, cfg.d_model),
+                                    jnp.bfloat16) * 0.02
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        full = Mo.forward_logits(params, {"patches": patches,
+                                          "tokens": toks}, cfg, ENV)
+        last, cache = Mo.prefill(params, {"patches": patches,
+                                          "tokens": toks[:, :S - 1]},
+                                 cfg, ENV, max_len=8 + S + 2)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        full = Mo.forward_logits(params, {"tokens": toks}, cfg, ENV)
+        last, cache = Mo.prefill(params, {"tokens": toks[:, :S - 1]},
+                                 cfg, ENV, max_len=S + 2)
+    assert float(jnp.max(jnp.abs(last[:, 0] - full[:, -2]))) < 1e-2
+
+    pos = (8 + S - 1) if cfg.family == "vlm" else (S - 1)
+    logits, _ = Mo.decode_step(params, toks[:, S - 1:S], cache,
+                               jnp.int32(pos), cfg, ENV)
+    assert float(jnp.max(jnp.abs(logits[:, 0] - full[:, -1]))) < 2e-2

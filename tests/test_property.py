@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for SAGA's invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aeg import AEG, ToolStats
+from repro.core.afs import AFSScheduler, TaskProgress
+from repro.core.belady import Access, BeladyOracle, replay_policy
+from repro.core.ttl import ToolTTLPolicy, memory_pressure
+from repro.core.walru import CacheEntry, EvictionWeights, LRUCache, \
+    WALRUCache
+
+sizes = st.floats(min_value=1.0, max_value=100.0)
+times = st.floats(min_value=0.0, max_value=1000.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 20), sizes, times), min_size=1,
+                max_size=60), st.floats(min_value=10.0, max_value=500.0))
+def test_walru_capacity_invariant(ops, capacity):
+    """used <= capacity after any insert sequence; used equals the sum of
+    entry sizes."""
+    c = WALRUCache(capacity)
+    t = 0.0
+    for sid, size, dt in ops:
+        t += dt
+        c.insert(CacheEntry(f"s{sid}", size, t), now=t)
+        assert c.used <= capacity + 1e-9
+        assert abs(c.used - sum(e.size_bytes
+                                for e in c.entries.values())) < 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_p_evict_bounded(r, reuse, s):
+    c = WALRUCache(100.0, EvictionWeights(), p_reuse_fn=lambda e: reuse)
+    e = CacheEntry("x", s * 100.0, (1 - r) * 100.0)
+    v = c.p_evict(e, now=100.0, tau_max=100.0, size_max=100.0)
+    assert -1e-9 <= v <= 1.0 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=0.001, max_value=100.0), min_size=1,
+                max_size=200), st.floats(0.0, 1.0))
+def test_ttl_bounds(history, pressure):
+    """Algorithm 1: 0 <= ttl <= TTL_max; monotone non-increasing in
+    memory pressure."""
+    pol = ToolTTLPolicy(ttl_max_s=300.0)
+    for v in history:
+        pol.observe("t", v)
+    ttl_hi = pol.ttl("t", 0.0)
+    ttl_lo = pol.ttl("t", pressure)
+    assert 0.0 <= ttl_lo <= ttl_hi <= 300.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 2.0))
+def test_memory_pressure_range(u):
+    m = memory_pressure(u)
+    assert 0.0 <= m <= 1.0
+    assert memory_pressure(min(u + 0.05, 2.0)) >= m   # monotone
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 10), st.integers(0, 10_000),
+       st.floats(min_value=50.0, max_value=2000.0))
+def test_belady_is_lower_bound(n_tasks, steps, seed, capacity):
+    """No online policy beats the offline-optimal replay."""
+    import random
+    rng = random.Random(seed)
+    trace = []
+    for i in range(n_tasks):
+        t = rng.uniform(0, 10)
+        for s in range(steps):
+            t += rng.uniform(0.1, 2.0)
+            trace.append(Access(t=t, session=f"s{i}",
+                                tokens=100.0 * (s + 1),
+                                bytes_=20.0 * (s + 1), node_id=s,
+                                last=(s == steps - 1)))
+    trace.sort(key=lambda a: a.t)
+    opt = BeladyOracle(capacity).replay(trace)
+    lru = replay_policy(trace, LRUCache(capacity))
+    wal = replay_policy(trace, WALRUCache(capacity))
+    assert opt <= lru + 1e-6
+    assert opt <= wal + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(1.0, 100.0), st.floats(1.0, 100.0)),
+                min_size=1, max_size=10))
+def test_afs_shares_are_a_distribution(tasks):
+    afs = AFSScheduler()
+    for i, (work, slack) in enumerate(tasks):
+        afs.add_task(TaskProgress(f"t{i}", f"ten{i % 3}",
+                                  deadline=slack, work_remain_s=work))
+    shares = afs.recompute(now=0.0)
+    assert abs(sum(shares.values()) - 1.0) < 1e-6
+    assert all(v >= 0 for v in shares.values())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(100.0, 100000.0), st.floats(1.0, 5000.0))
+def test_overlap_in_unit_interval(n_cur, n_obs):
+    aeg = AEG.linear_chain(["t"] * 3)
+    stats = ToolStats()
+    stats.observe("t", n_obs, 0.1)
+    ov = aeg.overlap(n_cur, 1, stats)
+    assert 0.0 <= ov < 1.0

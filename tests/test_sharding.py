@@ -1,0 +1,81 @@
+"""Sharding-rule tests: divisibility pruning + per-arch rule coverage."""
+import importlib
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, load_all
+from repro.models import lm
+from repro.models.sharding import ShardingEnv
+
+load_all()
+
+
+def fake_env(pod=False):
+    env = ShardingEnv(None)
+    env.axis_sizes = ({"pod": 2, "data": 16, "model": 16} if pod
+                      else {"data": 16, "model": 16})
+    return env
+
+
+def test_spec_prunes_indivisible_dims():
+    env = fake_env()
+    # seamless vocab is not divisible by 16 -> pruned to None
+    assert env.spec((256206, 1024), ["model", None]) == P(None, None)
+    assert env.spec((151936, 1024), ["model", None]) == P("model", None)
+    # multi-axis want keeps only the divisible prefix
+    assert env.spec((256,), [("data", "model")]) == P(("data", "model"))
+    assert env.spec((32,), [("data", "model")]) == P("data")
+    assert env.spec((24,), [("data", "model")]) == P(None)
+
+
+def test_batch_axes_single_vs_multipod():
+    assert fake_env().batch_axes == ("data",)
+    assert fake_env(pod=True).batch_axes == ("pod", "data")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_rules_cover_every_leaf(arch):
+    """Every parameter leaf gets a wish list of the right rank, and 2D+
+    weight matrices are 2D-sharded (FSDP x TP) where divisible."""
+    cfg = get_config(arch)
+    env = fake_env()
+    rules = lm.param_rules(cfg, env)
+    import jax
+    ab = lm.abstract_params(cfg)
+    n_sharded = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(ab)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        wants = rules(key, leaf.shape)
+        assert len(wants) == len(leaf.shape), key
+        spec = env.spec(leaf.shape, wants)
+        shard_factor = 1
+        for dim, s in zip(leaf.shape, spec):
+            if s is not None:
+                n_sharded += 1
+                axes = (s,) if isinstance(s, str) else s
+                f = 1
+                for a in axes:
+                    f *= env.axis_sizes[a]
+                assert dim % f == 0, (key, dim, s)
+    assert n_sharded > 0, "no parameter sharded at all"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "llava-next-34b"])
+def test_indivisible_heads_fall_back_to_head_dim(arch):
+    """24/56 q heads don't divide tp=16: rules must shard head_dim."""
+    cfg = get_config(arch)
+    env = fake_env()
+    assert not env.heads_shardable(cfg.n_heads)
+    rules = lm.param_rules(cfg, env)
+    wants = rules("layers/attn/wq", (cfg.n_layers, cfg.d_model,
+                                     cfg.n_heads, cfg.head_dim))
+    assert wants[-2] is None and wants[-1] == "model"
+
+
+def test_moe_ep_vs_tp_decision():
+    env = fake_env()
+    assert env.moe_ep(160)      # deepseek: 160 % 16 == 0 -> EP
+    assert env.moe_ep(16)       # jamba
+    assert not env.moe_ep(8)    # mixtral: d_ff TP fallback

@@ -1,0 +1,105 @@
+"""Cluster-simulator behaviour tests: end-to-end scheduling dynamics,
+fault tolerance, straggler mitigation, elasticity."""
+import pytest
+
+from repro.cluster import baselines as B
+from repro.cluster.faults import crash_recover_plan
+from repro.cluster.perf import PerfModel
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import burstgpt_workload, swebench_workload
+
+
+def _run(policy, tasks, n_workers=8, fault_plan=None, seed=0):
+    sim = ClusterSim(tasks, policy, n_workers=n_workers, seed=seed,
+                     fault_plan=fault_plan)
+    sim.run(horizon_s=36000)
+    return sim, summarize(sim)
+
+
+@pytest.fixture(scope="module")
+def small_swe():
+    return swebench_workload(n_tasks=60, rate_per_min=2.5, seed=0)
+
+
+def test_all_tasks_complete(small_swe):
+    sim, s = _run(B.saga(), small_swe)
+    assert s["n_tasks"] == len(small_swe)
+    assert all(m.finish >= m.arrival for m in sim.metrics.values())
+
+
+def test_saga_beats_request_level(small_swe):
+    _, saga = _run(B.saga(), small_swe)
+    _, vllm = _run(B.vllm(), small_swe)
+    assert saga["tct_mean"] < vllm["tct_mean"]
+    assert saga["regen_time_frac"] < vllm["regen_time_frac"]
+    assert saga["cache_hit_rate"] > 0.7
+    assert vllm["cache_hit_rate"] == 0.0
+
+
+def test_ablation_ordering(small_swe):
+    """Removing session affinity hurts the most (Table 4)."""
+    _, full = _run(B.saga(), small_swe)
+    _, no_aff = _run(B.saga_ablation("affinity"), small_swe)
+    assert no_aff["tct_mean"] >= full["tct_mean"] - 1e-6
+
+
+def test_worker_failure_recovery(small_swe):
+    """Tasks survive worker crashes: cache loss -> regeneration, not
+    task loss."""
+    plan = crash_recover_plan(8, horizon_s=1200.0, n_faults=2, seed=1)
+    sim, s = _run(B.saga(), small_swe, fault_plan=plan)
+    assert s["n_tasks"] == len(small_swe)     # nothing lost
+    _, clean = _run(B.saga(), small_swe)
+    assert s["regen_tokens_total"] >= clean["regen_tokens_total"]
+
+
+def test_elastic_scale_up(small_swe):
+    plan = [(60.0, "scale_up", 0), (120.0, "scale_up", 0)]
+    sim, s = _run(B.saga(), small_swe, n_workers=4, fault_plan=plan)
+    assert sim.n_workers == 6
+    assert s["n_tasks"] == len(small_swe)
+
+
+def test_work_stealing_reduces_imbalance():
+    """With a hotspot routing policy, stealing drains hot queues."""
+    tasks = swebench_workload(n_tasks=50, rate_per_min=6.0, seed=3)
+    pol_steal = B.saga()
+    pol_nosteal = B.saga_ablation("stealing")
+    _, with_steal = _run(pol_steal, tasks, n_workers=6)
+    _, no_steal = _run(pol_nosteal, tasks, n_workers=6)
+    assert with_steal["tct_p99"] <= no_steal["tct_p99"] * 1.25
+
+
+def test_multi_tenant_fairness_direction():
+    """SAGA protects light tenants far better than request-level FCFS
+    (Table 6's qualitative claim)."""
+    tasks = burstgpt_workload(horizon_s=420.0, seed=0, load_factor=0.2)
+    _, saga = _run(B.saga(), tasks, n_workers=16)
+    _, vllm = _run(B.vllm(), tasks, n_workers=16)
+    assert saga["slo_attainment"] > vllm["slo_attainment"]
+    assert saga["slo_by_tenant"].get("light", 0) >= \
+        vllm["slo_by_tenant"].get("light", 0)
+
+
+def test_bfs_dfs_tradeoff():
+    """Table 8: DFS minimizes evictions (depth-first admission keeps the
+    working set tiny under memory pressure); BFS floods the pool."""
+    tasks = swebench_workload(n_tasks=60, rate_per_min=10.0, seed=4)
+    perf = PerfModel(kv_pool_bytes=40e9)      # pressured pool
+    dfs_pol = B.strategy("dfs")
+    dfs_pol.admission_max_tasks = 8
+    sim_d = ClusterSim(tasks, dfs_pol, n_workers=8, perf=perf, seed=0)
+    sim_d.run(horizon_s=36000)
+    dfs = summarize(sim_d)
+    sim_b = ClusterSim(tasks, B.strategy("bfs"), n_workers=8, perf=perf,
+                       seed=0)
+    sim_b.run(horizon_s=36000)
+    bfs = summarize(sim_b)
+    assert dfs["evict_rate"] <= bfs["evict_rate"] + 1e-9
+    assert bfs["cache_hit_rate"] <= dfs["cache_hit_rate"] + 1e-9
+
+
+def test_deterministic_given_seed(small_swe):
+    _, a = _run(B.saga(), small_swe, seed=7)
+    _, b = _run(B.saga(), small_swe, seed=7)
+    assert a["tct_mean"] == b["tct_mean"]

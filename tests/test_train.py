@@ -1,0 +1,70 @@
+"""Training substrate tests: loss decreases, checkpoint/restore is exact,
+optimizer semantics."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, load_all
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import adamw_update, init_opt_state
+
+load_all()
+
+
+def test_adamw_moves_params_and_clips():
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p, jnp.float32) * 100.0, params)
+    newp, newopt, gnorm = adamw_update(params, grads, opt, lr=1e-2,
+                                       grad_clip=1.0)
+    assert float(gnorm) > 1.0                  # clipping engaged
+    assert int(newopt.step) == 1
+    moved = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32) -
+                                      b.astype(jnp.float32))))
+                for a, b in zip(jax.tree_util.tree_leaves(newp),
+                                jax.tree_util.tree_leaves(params)))
+    assert moved > 0
+
+
+def test_loss_decreases_on_structured_data():
+    from repro.launch.train import train_loop
+    _, _, losses = train_loop("micro", steps=20, batch=4, seq=32,
+                              lr=2e-3, log_every=100)
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_roundtrip_exact():
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_checkpoint(d, 3, params, opt,
+                             data_state={"step": 3, "seed": 0})
+        ap = lm.abstract_params(cfg)
+        from repro.train.optimizer import abstract_opt_state
+        step, p2, o2, meta = ckpt.restore_checkpoint(
+            d, ap, abstract_opt_state(ap))
+        assert step == 3
+        assert meta["data_state"]["step"] == 3
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_data_pipeline_deterministic_resume():
+    cfg = get_config("micro")
+    d1 = SyntheticLM(cfg, batch=2, seq=16, seed=5)
+    batches = [d1.next() for _ in range(4)]
+    snap = d1.snapshot()
+    nxt = d1.next()
+    d2 = SyntheticLM(cfg, batch=2, seq=16, seed=5)
+    d2.restore(snap)
+    nxt2 = d2.next()
+    np.testing.assert_array_equal(nxt["tokens"], nxt2["tokens"])
