@@ -33,6 +33,46 @@ def elastic_plan(horizon_s: float, n_new_workers: int = 2) -> Plan:
             for i in range(n_new_workers)]
 
 
+def chaos_plan(n_workers: int, horizon_s: float, n_events: int = 20,
+               seed: int = 0, p_fail: float = 0.5,
+               p_recover: float = 0.35, min_alive: int = 1) -> Plan:
+    """Randomized fail/recover/scale-up schedule for chaos testing.
+
+    Tracks cluster membership so the plan is always executable: only
+    live workers fail, only dead workers recover, at least ``min_alive``
+    workers stay up at every instant (a fully-dead cluster can make no
+    progress, and the conservation tests require forward progress).
+    Deterministic for a given seed — every choice draws from one
+    ``random.Random`` and iterates sorted sets.
+    """
+    rng = random.Random(seed)
+    alive = set(range(n_workers))
+    dead: set = set()
+    next_id = n_workers
+    plan: Plan = []
+    t = 0.0
+    for _ in range(n_events):
+        t += rng.uniform(0.02, 0.08) * horizon_s
+        if t >= horizon_s:
+            break
+        r = rng.random()
+        if r < p_fail and len(alive) > min_alive:
+            w = rng.choice(sorted(alive))
+            alive.discard(w)
+            dead.add(w)
+            plan.append((t, "fail", w))
+        elif r < p_fail + p_recover and dead:
+            w = rng.choice(sorted(dead))
+            dead.discard(w)
+            alive.add(w)
+            plan.append((t, "recover", w))
+        else:
+            plan.append((t, "scale_up", 0))
+            alive.add(next_id)
+            next_id += 1
+    return plan
+
+
 class StragglerInjector:
     """Marks workers as stragglers by scaling their service rates.
 

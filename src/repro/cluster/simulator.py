@@ -13,21 +13,70 @@ Routing modes (baseline matrix, §9.1 "Baselines"):
   least   — least-loaded per request (vLLM FCFS)
   group   — prefix-hash affinity (vLLM+APC PrefixCacheAffinityRouter)
   sticky  — always the home worker (KVFlow / TRT-LLM single-node)
+
+Execution lifecycle & failure semantics
+---------------------------------------
+Every running LLM step is tracked in an explicit in-flight registry
+(``ClusterSim.inflight``): task, step index, worker, start/finish time,
+KV bytes held, and a monotonically increasing *attempt* id.  Completion
+events (``llm_done``) carry the attempt id and validate against the
+registry, so an event for a step that was cancelled in the meantime is
+recognised as stale and dropped instead of firing blindly.
+
+When a worker fails (``fail`` event):
+  * its queued steps are drained and re-enqueued on live workers;
+  * its in-flight steps are *cancelled*: the un-executed tail of their
+    charged compute is refunded (end-first: decode before prefill, so
+    regeneration time/tokens are only un-charged if the prefill that
+    held them never ran), their KV reservation is released, and the
+    steps are re-enqueued from scratch.  The failed
+    worker's KV pool is wiped (GlobalCoordinator.worker_failed), so the
+    retried step misses cache and pays full regeneration — the §3.1
+    cache-loss accounting.  Compute already executed on the aborted
+    attempt stays charged (work lost to a crash was still real work).
+  * in-flight migrations targeting the dead worker are re-routed to a
+    live worker when their ``migr_done`` event arrives.
+
+Work stealing, routing and migration all consult worker liveness
+through the same flags (``WorkerState.alive`` here, mirrored into
+``GlobalCoordinator.alive`` by the fail/recover/scale handlers), so a
+dead worker can never be picked as a thief, a victim, a routing target
+or a migration destination.  If *every* worker is dead, steps park in
+an orphan buffer and re-enqueue on the next recover/scale-up.
+
+Determinism: all randomness flows through one seeded ``random.Random``;
+string hashing (``group`` routing) uses a stable FNV-1a hash, so two
+identical-seed runs produce byte-identical ``summarize()`` output even
+across processes with different ``PYTHONHASHSEED``.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-import math
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.cluster.perf import PerfModel
 from repro.cluster.workload import Task
 
 INF = float("inf")
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_FNV_MASK = 0xFFFFFFFFFFFFFFFF
+
+
+def _fnv1a(s: str) -> int:
+    """Stable 64-bit FNV-1a string hash.  Python's builtin ``hash`` is
+    randomized per process (PYTHONHASHSEED), which made ``group``
+    routing — and therefore every baseline number — irreproducible."""
+    h = _FNV_OFFSET
+    for b in s.encode("utf-8"):
+        h ^= b
+        h = (h * _FNV_PRIME) & _FNV_MASK
+    return h
 
 
 @dataclass
@@ -46,12 +95,102 @@ class StepJob:
     step_idx: int
     enqueued_at: float
     worker: int = -1
+    cancelled: bool = False           # lazy-deletion flag (StepQueue)
+
+
+class StepQueue:
+    """Per-worker pending-step priority queue.
+
+    A lazy-deletion binary heap keyed by ``(priority, enqueued_at,
+    seq)`` — O(log n) push/pop instead of the previous
+    sort-per-enqueue O(n log n) list.  Stealing removes arbitrary
+    sessions by tombstoning (``StepJob.cancelled``); dead entries are
+    skipped on the next peek/pop.  ``seq`` is a global monotone counter
+    so ties break deterministically (FIFO), never by object identity.
+    """
+
+    __slots__ = ("_heap", "_live")
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, float, int, StepJob]] = []
+        self._live = 0
+
+    def __len__(self) -> int:
+        return self._live
+
+    def __bool__(self) -> bool:
+        return self._live > 0
+
+    def push(self, prio: float, seq: int, job: StepJob) -> None:
+        heapq.heappush(self._heap, (prio, job.enqueued_at, seq, job))
+        self._live += 1
+
+    def peek(self) -> Optional[StepJob]:
+        h = self._heap
+        while h and h[0][3].cancelled:
+            heapq.heappop(h)
+        return h[0][3] if h else None
+
+    def pop(self) -> Optional[StepJob]:
+        job = self.peek()
+        if job is not None:
+            heapq.heappop(self._heap)
+            self._live -= 1
+        return job
+
+    def remove(self, session_id: str) -> Optional[StepJob]:
+        """Tombstone and return the queued step of ``session_id`` (the
+        steal path; O(n) scan, but steals are epoch-rate events)."""
+        for _, _, _, job in self._heap:
+            if not job.cancelled and job.task.task_id == session_id:
+                job.cancelled = True
+                self._live -= 1
+                return job
+        return None
+
+    def drain(self) -> List[StepJob]:
+        """Remove and return all live jobs (worker-failure requeue),
+        oldest-first for deterministic re-enqueue order."""
+        jobs = [j for _, _, _, j in self._heap if not j.cancelled]
+        jobs.sort(key=lambda j: (j.enqueued_at, j.task.task_id,
+                                 j.step_idx))
+        self._heap.clear()
+        self._live = 0
+        return jobs
+
+    def snapshot(self) -> List[Tuple[float, str]]:
+        """(enqueued_at, session_id) pairs oldest-first, as the work
+        stealer expects."""
+        return sorted((j.enqueued_at, j.task.task_id)
+                      for _, _, _, j in self._heap if not j.cancelled)
+
+
+class _QueueView:
+    """Lazy stealer-facing view of a StepQueue.  The epoch tick hands
+    one per worker to ``WorkStealer``; emptiness checks are O(1) and
+    the sorted (enqueued_at, session_id) dump is built only if the
+    stealer actually iterates this worker's queue (i.e. it became the
+    victim) — not for all n_workers queues every 100 ms."""
+
+    __slots__ = ("_q",)
+
+    def __init__(self, q) -> None:
+        self._q = q
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q.snapshot())
 
 
 @dataclass
 class WorkerState:
     active: int = 0                    # busy batch slots
-    queue: List[Tuple[float, str, StepJob]] = field(default_factory=list)
+    queue: StepQueue = field(default_factory=StepQueue)
     busy_s: float = 0.0                # cumulative compute-busy seconds
     regen_s: float = 0.0               # of which: cache regeneration
     prefill_free_at: float = 0.0       # serial prefill pipeline head
@@ -62,6 +201,27 @@ class WorkerState:
         if not self.alive:
             return INF
         return (self.active + len(self.queue)) / max_batch
+
+
+@dataclass
+class InFlightStep:
+    """Registry record for one running LLM step (one per task, max).
+
+    ``attempt`` stamps the matching ``llm_done`` event; a mismatch at
+    delivery time means the step was cancelled (worker fault) and the
+    event is stale.  ``busy_charged`` / ``regen_s_charged`` /
+    ``regen_tokens`` record what was charged to the worker and task at
+    start, so cancellation can refund the un-executed tail of each."""
+    job: StepJob
+    attempt: int
+    worker: int
+    started: float
+    finish: float
+    kv_bytes: float
+    busy_charged: float
+    decode_s: float = 0.0        # tail of busy_charged (prefill runs first)
+    regen_s_charged: float = 0.0
+    regen_tokens: float = 0.0
 
 
 @dataclass
@@ -96,32 +256,55 @@ class ClusterSim:
         self.metrics: Dict[str, TaskMetrics] = {}
         self.events: List[Tuple[float, int, str, tuple]] = []
         self._eid = itertools.count()
+        self._seq = itertools.count()        # queue FIFO tie-break
+        self._attempt = itertools.count()    # in-flight step attempt ids
         self.now = 0.0
         self.active_tasks = 0
         self.admission_queue: List[Task] = []
         self.mem_samples: List[Tuple[float, float]] = []   # (dt, util)
         self._last_mem_t = 0.0
+        self._mem_min_dt = self.perf.epoch_s   # sampling granularity
         self.migrations = 0
         self.fault_plan = list(fault_plan or [])
-        # group routing: stable hash of workload name
-        self._group_worker = {}
+        self.events_processed = 0
+        # float-dust tolerance for KV-byte conservation checks (entries
+        # are ~1e10 bytes; long runs accumulate rounding in the sums)
+        self._kv_tol = 1e-6 * self.co.capacity
+        # execution-lifecycle registries (see module docstring)
+        self.inflight: Dict[str, InFlightStep] = {}
+        self.migrating: Dict[str, int] = {}    # task_id -> dst worker
+        self._orphans: List[StepJob] = []      # steps with no live worker
+        # group routing: stable FNV-1a hash of the session prefix
+        self._group_worker: Dict[str, int] = {}
+        self._started = False
 
     # -- event plumbing ----------------------------------------------------
     def _push(self, t: float, kind: str, args: tuple = ()) -> None:
         heapq.heappush(self.events, (t, next(self._eid), kind, args))
 
     def run(self, horizon_s: float = INF) -> Dict[str, TaskMetrics]:
-        for task in self.tasks.values():
-            self._push(task.arrival_s, "arrival", (task.task_id,))
-        self._push(self.perf.epoch_s, "epoch")
-        for t, kind, w in self.fault_plan:
-            self._push(t, kind, (w,))
+        """Advance the event loop up to ``horizon_s``.  Resumable: an
+        event past the horizon stays queued, so a later ``run`` call
+        with a larger horizon continues where this one stopped."""
+        if not self._started:
+            self._started = True
+            for task in self.tasks.values():
+                self._push(task.arrival_s, "arrival", (task.task_id,))
+            self._push(self.perf.epoch_s, "epoch")
+            for t, kind, w in self.fault_plan:
+                self._push(t, kind, (w,))
+        elif self._all_done():
+            # completed sim: the final break leaves one epoch event
+            # queued; processing it here would shift now/mem_samples and
+            # make resumed runs diverge from one-shot runs
+            return self.metrics
         while self.events:
-            t, _, kind, args = heapq.heappop(self.events)
-            if t > horizon_s:
+            if self.events[0][0] > horizon_s:
                 break
+            t, _, kind, args = heapq.heappop(self.events)
             self._sample_mem(t)
             self.now = t
+            self.events_processed += 1
             getattr(self, f"_on_{kind}")(*args)
             if kind != "epoch" and self._all_done():
                 break
@@ -132,9 +315,13 @@ class ClusterSim:
             len(self.metrics) == len(self.tasks) and not self.admission_queue
 
     def _sample_mem(self, t: float) -> None:
+        # Throttled to the epoch period: the sums below are O(n_workers),
+        # and sampling them on every event dominated the event loop at
+        # 256 workers.  Epoch events fire every epoch_s anyway, so the
+        # time-weighted average keeps epoch resolution.
         dt = t - self._last_mem_t
-        if dt <= 0:
-            return
+        if dt < self._mem_min_dt - 1e-9:   # tolerance: epoch times are
+            return                         # accumulated floats
         util = (sum(p.used for p in self.co.pools) +
                 sum(w.active_kv for w in self.workers)) / \
             (self.co.capacity * self.n_workers)
@@ -145,13 +332,22 @@ class ClusterSim:
     def _loads(self) -> List[float]:
         return [w.load(self.perf.max_batch) for w in self.workers]
 
+    def _least_loaded(self, loads: Sequence[float]) -> int:
+        """Deterministic least-loaded pick: seeded-RNG tie-break among
+        exact-minimum workers (spreads equal-load ties without the
+        per-candidate RNG draws the old ``min(key=...)`` made)."""
+        lo = min(loads)
+        ties = [i for i, l in enumerate(loads) if l == lo]
+        if len(ties) == 1:
+            return ties[0]
+        return ties[self.rng.randrange(len(ties))]
+
     def _route(self, task: Task) -> int:
         mode = self.policy.routing
         sid = task.task_id
         loads = self._loads()
         if mode == "least":
-            return min(range(self.n_workers),
-                       key=lambda i: (loads[i], self.rng.random()))
+            return self._least_loaded(loads)
         if mode == "group":
             # PrefixCacheAffinityRouter: load-blind consistent hash of the
             # request prefix.  An agent session's prompt keeps its own
@@ -159,17 +355,17 @@ class ClusterSim:
             # cannot rebalance (hotspots) and overflows when the preferred
             # worker saturates.
             if sid not in self._group_worker:
-                self._group_worker[sid] = (hash(sid) * 2654435761)                     % self.n_workers
+                self._group_worker[sid] = (_fnv1a(sid) * 2654435761) \
+                    % self.n_workers
             w = self._group_worker[sid]
             if loads[w] < self.policy.saga.theta and self.workers[w].alive:
                 return w
-            return min(range(self.n_workers),
-                       key=lambda i: (loads[i], self.rng.random()))
+            return self._least_loaded(loads)
         if mode == "sticky":
             home = self.co.router.home.get(sid)
             if home is not None and self.workers[home].alive:
                 return home
-            w = min(range(self.n_workers), key=lambda i: loads[i])
+            w = self._least_loaded(loads)
             self.co.router.set_home(sid, w)
             return w
         return self.co.route(sid, loads, self.now)
@@ -213,18 +409,35 @@ class ClusterSim:
             self.perf.kv_bytes_per_token
         return ws.active_kv + ctx_bytes <= self.co.capacity
 
-    def _enqueue_step(self, job: StepJob) -> None:
-        w = self._route(job.task)
+    def _queue_push(self, w: int, job: StepJob) -> None:
+        """Insert a pending step in priority order.  One code path for
+        every producer (enqueue, migration landing, fault requeue), so
+        AFS ordering can't be bypassed with a hardcoded priority."""
+        if self.policy.queue_discipline == "afs":
+            prio = -self.co.afs.priority(job.task.tenant)
+        else:
+            prio = job.enqueued_at
+        self.workers[w].queue.push(prio, next(self._seq), job)
+
+    def _enqueue_step(self, job: StepJob,
+                      worker: Optional[int] = None) -> None:
+        """Place a step on ``worker`` (or route it), starting it
+        immediately when a slot + KV headroom are free.  A dead
+        explicit target falls back to routing; if no worker is alive
+        the step parks in the orphan buffer until recover/scale-up."""
+        w = worker if worker is not None and self.workers[worker].alive \
+            else self._route(job.task)
+        if not self.workers[w].alive:
+            self._orphans.append(job)
+            return
         job.worker = w
+        job.cancelled = False
         ws = self.workers[w]
         if self._can_admit(w, job):
             ws.active += 1
             self._start_step(job)
         else:
-            prio = -self.co.afs.priority(job.task.tenant) \
-                if self.policy.queue_discipline == "afs" else job.enqueued_at
-            ws.queue.append((prio, job.task.task_id, job))
-            ws.queue.sort(key=lambda x: (x[0], x[2].enqueued_at))
+            self._queue_push(w, job)
 
     def _start_step(self, job: StepJob) -> None:
         task, i, w = job.task, job.step_idx, job.worker
@@ -255,26 +468,44 @@ class ClusterSim:
         ws.prefill_free_at = pf_start + pf_dur
         decode_dur = step.out_tokens / self.perf.decode_tokens_per_s
         done = pf_start + pf_dur + decode_dur
-        ws.busy_s += pf_dur + decode_dur
+        busy = pf_dur + decode_dur
+        ws.busy_s += busy
         ws.regen_s += regen / rate
-        ws.active_kv += ctx * self.perf.kv_bytes_per_token
+        kv_bytes = ctx * self.perf.kv_bytes_per_token
+        ws.active_kv += kv_bytes
         self.metrics[task.task_id].regen_tokens += regen
-        self._push(done, "llm_done", (task.task_id, i, w))
+        attempt = next(self._attempt)
+        self.inflight[task.task_id] = InFlightStep(
+            job, attempt, w, self.now, done, kv_bytes, busy,
+            decode_s=decode_dur, regen_s_charged=regen / rate,
+            regen_tokens=regen)
+        self._push(done, "llm_done", (task.task_id, i, w, attempt))
 
-    def _on_llm_done(self, task_id: str, i: int, w: int) -> None:
+    def _on_llm_done(self, task_id: str, i: int, w: int,
+                     attempt: int) -> None:
+        rec = self.inflight.get(task_id)
+        if rec is None or rec.attempt != attempt:
+            return   # stale: the step was cancelled by a worker fault
+        del self.inflight[task_id]
         task = self.tasks[task_id]
         ws = self.workers[w]
-        ws.active = max(0, ws.active - 1)
-        ws.active_kv = max(
-            0.0, ws.active_kv -
-            task.context_before(i) * self.perf.kv_bytes_per_token)
+        ws.active -= 1
+        ws.active_kv -= rec.kv_bytes
+        if ws.active < 0 or ws.active_kv < -self._kv_tol:
+            raise RuntimeError(
+                f"conservation violated on worker {w}: "
+                f"active={ws.active} active_kv={ws.active_kv}")
+        ws.active_kv = max(0.0, ws.active_kv)   # float dust
         self._drain_queue(w)
         step = task.steps[i]
         ctx_after = task.context_after(i)
         if i + 1 >= task.n_steps:
             # final step's action is "finish" — no tool wait
+            m = self.metrics[task_id]
+            if m.finish >= 0:
+                raise RuntimeError(f"task {task_id} finished twice")
             self.co.task_finished(task_id, self.now)
-            self.metrics[task_id].finish = self.now
+            m.finish = self.now
             self.active_tasks -= 1
             if self.admission_queue:
                 self._admit(self.admission_queue.pop(0))
@@ -297,65 +528,170 @@ class ClusterSim:
 
     def _drain_queue(self, w: int) -> None:
         ws = self.workers[w]
-        while ws.queue and self._can_admit(w, ws.queue[0][2]):
-            _, _, job = ws.queue.pop(0)
+        while True:
+            job = ws.queue.peek()
+            if job is None or not self._can_admit(w, job):
+                break
+            ws.queue.pop()
             ws.active += 1
             self._start_step(job)
 
     # -- epoch: AFS + work stealing ------------------------------------------
     def _on_epoch(self) -> None:
         loads = self._loads()
-        queues = [[(j.enqueued_at, j.task.task_id) for _, _, j in w.queue]
-                  for w in self.workers]
-        decision, _ = self.co.epoch_tick(self.now, loads, queues)
+        if self.policy.saga.enable_stealing:
+            queues = [_QueueView(w.queue) for w in self.workers]
+        else:
+            queues: List[list] = [[]] * len(self.workers)
+        alive = [w.alive for w in self.workers]
+        decision, _ = self.co.epoch_tick(self.now, loads, queues,
+                                         alive=alive)
         if decision is not None:
             vq = self.workers[decision.victim].queue
-            if self.co.stealer.accept(decision, len(vq), self.now):
-                idx = next((k for k, (_, sid, _) in enumerate(vq)
-                            if sid == decision.session_id), None)
-                if idx is not None:
-                    _, _, job = vq.pop(idx)
+            if self.co.stealer.accept(
+                    decision, len(vq), self.now,
+                    thief_alive=self.workers[decision.thief].alive):
+                job = vq.remove(decision.session_id)
+                if job is not None:
                     mig = self.perf.sample_migration_s(self.rng)
                     self.migrations += 1
                     self.metrics[job.task.task_id].migrations += 1
+                    self.migrating[job.task.task_id] = decision.thief
                     self._push(self.now + mig, "migr_done",
                                (job.task.task_id, job.step_idx,
                                 decision.victim, decision.thief))
         if self.events or not self._all_done():
+            if not self.events and not any(w.alive for w in self.workers):
+                # every worker is dead and nothing is scheduled that
+                # could revive one (no recover/scale-up left): ticking
+                # forever cannot make progress, so let run() return —
+                # unfinished tasks stay visible and
+                # check_conservation() reports them
+                return
             self._push(self.now + self.perf.epoch_s, "epoch")
 
     def _on_migr_done(self, task_id: str, step_idx: int, src: int,
                       dst: int) -> None:
-        if task_id not in self.tasks:
+        """A stolen session's KV transfer completed.  Validates against
+        live state: if the destination died while the transfer was in
+        flight, the KV is dropped and the step re-routes to a live
+        worker (it regenerates there — §3.1 accounting) instead of
+        parking forever on the dead worker's queue."""
+        self.migrating.pop(task_id, None)
+        m = self.metrics.get(task_id)
+        if m is None or m.finish >= 0:
+            return
+        job = StepJob(self.tasks[task_id], step_idx, self.now)
+        if not self.workers[dst].alive:
+            self._enqueue_step(job)          # re-route, cache lost
             return
         self.co.migrate_session(task_id, src, dst, self.now)
-        job = StepJob(self.tasks[task_id], step_idx, self.now, dst)
-        ws = self.workers[dst]
-        if self._can_admit(dst, job):
-            ws.active += 1
-            self._start_step(job)
-        else:
-            ws.queue.append((0.0, task_id, job))
+        self._enqueue_step(job, worker=dst)
 
     # -- faults / elasticity ---------------------------------------------------
-    def _on_fail(self, w: int) -> None:
+    def _cancel_inflight_on(self, w: int) -> List[StepJob]:
+        """Cancel every in-flight step on worker ``w``: refund the
+        un-executed tail of the charged compute, release the KV
+        reservation, and invalidate the pending ``llm_done`` events
+        (their attempt ids no longer match the registry).  The refund
+        is taken end-first — decode before prefill, since prefill
+        (where regeneration runs) executes first — so regeneration
+        time/tokens are only refunded for the prefill portion that
+        never ran, keeping regen <= busy per worker while never
+        un-charging regeneration that actually executed."""
         ws = self.workers[w]
+        victims = sorted(tid for tid, rec in self.inflight.items()
+                         if rec.worker == w)
+        jobs: List[StepJob] = []
+        for tid in victims:
+            rec = self.inflight.pop(tid)
+            ws.active -= 1
+            ws.active_kv -= rec.kv_bytes
+            refund = min(rec.busy_charged,
+                         max(0.0, rec.finish - self.now))
+            ws.busy_s -= refund
+            pf_dur = rec.busy_charged - rec.decode_s
+            into_prefill = max(0.0, refund - rec.decode_s)
+            if pf_dur > 0.0 and into_prefill > 0.0 \
+                    and rec.regen_s_charged > 0.0:
+                frac = into_prefill / pf_dur
+                ws.regen_s -= rec.regen_s_charged * frac
+                self.metrics[tid].regen_tokens -= rec.regen_tokens * frac
+            jobs.append(rec.job)
+        return jobs
+
+    def _on_fail(self, w: int) -> None:
+        """Worker dies: cancel its in-flight steps, requeue them plus
+        its queued steps on live workers, wipe its KV pool/affinities.
+        Nothing completes on a dead node; retried steps pay cache-loss
+        regeneration."""
+        ws = self.workers[w]
+        if not ws.alive:
+            return                           # already down
         ws.alive = False
         self.co.worker_failed(w)
-        requeue = [j for _, _, j in ws.queue]
-        ws.queue.clear()
+        requeue = ws.queue.drain()
+        requeue.extend(self._cancel_inflight_on(w))
+        if ws.active != 0 or abs(ws.active_kv) > self._kv_tol:
+            raise RuntimeError(
+                f"worker {w} lifecycle leak at failure: "
+                f"active={ws.active} active_kv={ws.active_kv}")
         ws.active = 0
+        ws.active_kv = 0.0
+        ws.prefill_free_at = 0.0             # prefill pipeline dies too
         for job in requeue:
             self._enqueue_step(StepJob(job.task, job.step_idx, self.now))
 
     def _on_recover(self, w: int) -> None:
         self.workers[w].alive = True
         self.co.worker_recovered(w)
+        self._readmit_orphans()
 
     def _on_scale_up(self, _unused: int = 0) -> None:
         self.co.add_worker()
         self.workers.append(WorkerState())
         self.n_workers += 1
+        self._readmit_orphans()
+
+    def _readmit_orphans(self) -> None:
+        orphans, self._orphans = self._orphans, []
+        for job in orphans:
+            self._enqueue_step(StepJob(job.task, job.step_idx, self.now))
+
+    # -- invariants -------------------------------------------------------
+    def check_conservation(self) -> None:
+        """Check the workflow-atomic lifecycle invariants after a run:
+        every admitted task finished exactly once (double finishes raise
+        during the run), no step is still queued / in flight / mid-
+        migration / orphaned, and per-worker slot and KV accounting
+        returned to zero.  Raises RuntimeError listing every violation
+        (explicit raises, not asserts, so ``python -O`` cannot compile
+        the gate away).  Used by the fault tests and scale benchmark."""
+        bad: List[str] = []
+        unfinished = [t for t, m in self.metrics.items() if m.finish < 0]
+        if unfinished:
+            bad.append(f"tasks never finished: {unfinished[:5]}")
+        if len(self.metrics) != len(self.tasks):
+            bad.append("tasks never admitted")
+        if self.admission_queue:
+            bad.append("tasks stuck in admission")
+        if self.active_tasks != 0:
+            bad.append(f"active_tasks={self.active_tasks}")
+        if self.inflight:
+            bad.append(f"steps still in flight: {sorted(self.inflight)[:5]}")
+        if self.migrating:
+            bad.append(f"migrations in limbo: {sorted(self.migrating)[:5]}")
+        if self._orphans:
+            bad.append("orphaned steps never re-admitted")
+        for w, ws in enumerate(self.workers):
+            if len(ws.queue) != 0:
+                bad.append(f"worker {w} queue not drained")
+            if ws.active != 0:
+                bad.append(f"worker {w} active={ws.active}")
+            if abs(ws.active_kv) >= self._kv_tol:
+                bad.append(f"worker {w} active_kv={ws.active_kv}")
+        if bad:
+            raise RuntimeError("conservation violated: " + "; ".join(bad))
 
 
 # --- summary ----------------------------------------------------------------

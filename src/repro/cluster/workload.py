@@ -170,6 +170,23 @@ def webarena_workload(n_tasks: int = 812, rate_per_min: float = 8.0,
             for i, t in enumerate(arr)]
 
 
+def scale_workload(n_workers: int, tasks_per_worker: float = 2.0,
+                   seed: int = 0, horizon_s: float = 600.0,
+                   n_steps: int = 8) -> List[Task]:
+    """Cluster-scale driver for the schedulers' hot paths (the 256-worker
+    ``benchmarks/scale_sweep.py``): short fixed-length swebench-style
+    tasks at an aggregate arrival rate proportional to cluster size, so
+    per-worker pressure — and therefore queue depth, the thing the heap
+    queues are meant to handle — stays constant as workers grow."""
+    rng = random.Random(seed + 3)
+    n_tasks = int(n_workers * tasks_per_worker)
+    rate = n_tasks / (horizon_s / 60.0)
+    arr = poisson_arrivals(rate, horizon_s * 1.5, rng)[:n_tasks]
+    return [make_task(f"scale-{i}", f"tenant{i % 8}", "burstgpt", t, rng,
+                      n_steps=n_steps)
+            for i, t in enumerate(arr)]
+
+
 def burstgpt_workload(horizon_s: float = 1800.0, seed: int = 0,
                       load_factor: float = 0.5) -> List[Task]:
     """10 tenants: 3 heavy (100-step), 4 medium (30-step), 3 light

@@ -145,8 +145,12 @@ class GlobalCoordinator:
             self.inferencer.record_trace(info.tools_seen)
         self.afs.finish_task(session_id)
         self.router.forget(session_id)
-        for pool in self.pools:
-            pool.remove(session_id)
+        for w in range(len(self.pools)):
+            # explicit unpin before removal: a hit entry pinned at the
+            # final step's start must not survive as an unevictable ghost
+            # if removal is ever made lazy
+            self.unpin(session_id, w)
+            self.pools[w].remove(session_id)
 
     # -- routing (Eq. 7) ---------------------------------------------------
     def route(self, session_id: str, loads: Sequence[float],
@@ -162,7 +166,7 @@ class GlobalCoordinator:
     # -- cache events -------------------------------------------------------
     def on_step_start(self, session_id: str, worker: int,
                       ctx_tokens: float, now: float
-                      ) -> Tuple[bool, float]:
+                      ) -> Tuple[bool, float, float]:
         """Session begins an LLM step on `worker`.  Returns
         (cache_hit, prefill_tokens, background_tokens):
           hit  -> (True, delta_since_cached, 0): only the tool
@@ -215,12 +219,23 @@ class GlobalCoordinator:
             n += 1
         return n
 
+    def unpin(self, session_id: str, worker: int) -> None:
+        """Release the decode-time pin taken by ``on_step_start`` on a
+        cache hit.  Called on step end and task finish; without it a
+        pinned entry is only released by wholesale replacement, which a
+        cancelled (fault-aborted) step never performs."""
+        e = self.pools[worker].entries.get(session_id)
+        if e is not None:
+            e.pinned = False
+
     def on_step_end(self, session_id: str, worker: int, ctx_tokens: float,
                     entry_bytes: float, next_tool: str, now: float
                     ) -> List[CacheEntry]:
-        """LLM step done; session enters a tool call.  Inserts/updates the
-        cache entry with a tool-aware TTL and maybe issues a prefetch.
-        Returns evicted entries."""
+        """LLM step done; session enters a tool call.  Unpins the
+        step's hit entry, then inserts/updates the cache entry with a
+        tool-aware TTL and maybe issues a prefetch.  Returns evicted
+        entries."""
+        self.unpin(session_id, worker)
         info = self.sessions.get(session_id)
         if info is not None:
             info.node_id += 1
@@ -254,14 +269,23 @@ class GlobalCoordinator:
 
     # -- stealing / migration ------------------------------------------------
     def epoch_tick(self, now: float, loads: Sequence[float],
-                   queues: Sequence[Sequence[Tuple[float, str]]]
+                   queues: Sequence[Sequence[Tuple[float, str]]],
+                   alive: Optional[Sequence[bool]] = None
                    ) -> Tuple[Optional[StealDecision], Dict[str, float]]:
+        """Per-epoch AFS share recompute + steal decision.  ``alive``
+        defaults to the coordinator's own liveness view; dead workers
+        are treated as not-idle (their empty queues must not accrue
+        steal credit) and are excluded from thief and victim roles."""
+        if alive is None:
+            alive = self.alive
         shares = self.afs.recompute(now) if self.cfg.enable_afs else {}
         decision = None
         if self.cfg.enable_stealing:
             for w in range(len(loads)):
-                self.stealer.note_queue_state(w, not queues[w], now)
-            decision = self.stealer.maybe_steal(now, loads, queues)
+                up = w < len(alive) and alive[w]
+                self.stealer.note_queue_state(w, up and not queues[w], now)
+            decision = self.stealer.maybe_steal(now, loads, queues,
+                                                alive=alive)
         return decision, shares
 
     def migrate_session(self, session_id: str, src: int, dst: int,
@@ -278,9 +302,13 @@ class GlobalCoordinator:
 
     # -- fault tolerance -------------------------------------------------
     def worker_failed(self, worker: int) -> List[str]:
-        """Worker dies: cache lost, affinities dropped; sessions re-route
-        on their next step (cache loss = regeneration, the same
-        accounting SAGA already does)."""
+        """Worker dies: cache lost (pool wiped, so any pinned hit
+        entries go with it), affinities dropped, liveness flag cleared
+        — routing/stealing consult it from here on.  Sessions re-route
+        on their next step and pay cache-loss regeneration (§3.1); the
+        simulator pairs this with cancelling the worker's in-flight
+        steps and requeueing them on live workers.  Returns the session
+        ids whose state was lost."""
         self.alive[worker] = False
         lost = list(self.pools[worker].entries)
         self.pools[worker] = self._make_pool()

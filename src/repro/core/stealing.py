@@ -52,21 +52,29 @@ class WorkStealer:
         return t0 is not None and (now - t0) >= self.t_idle
 
     def maybe_steal(self, now: float, loads: Sequence[float],
-                    queues: Sequence[Sequence[Tuple[float, str]]]
+                    queues: Sequence[Sequence[Tuple[float, str]]],
+                    alive: Optional[Sequence[bool]] = None
                     ) -> Optional[StealDecision]:
         """queues[w] = [(enqueue_time, session_id), ...] oldest-first.
 
         Returns a decision or None.  Safeguard (a): requires an idle
         thief AND a victim above the load-ratio threshold at the same
-        instant.
+        instant.  ``alive`` masks dead workers out of both roles: a
+        dead worker has an empty queue and so accrues idle time, but
+        stealing onto it would strand the session forever.
         """
         n = len(loads)
-        idle = [w for w in range(n) if self._idle_ok(w, now)]
+
+        def _ok(w: int) -> bool:
+            return alive is None or (w < len(alive) and alive[w])
+
+        idle = [w for w in range(n) if _ok(w) and self._idle_ok(w, now)]
         if not idle:
             return None
         lo = max(min(loads), 1e-6)
         overloaded = [w for w in range(n)
-                      if loads[w] / lo >= self.r_max and queues[w]]
+                      if _ok(w) and loads[w] / lo >= self.r_max
+                      and queues[w]]
         if not overloaded:
             return None
         thief = min(idle, key=lambda w: loads[w])
@@ -81,10 +89,15 @@ class WorkStealer:
         return None
 
     def accept(self, decision: StealDecision, victim_queue_len: int,
-               now: float) -> bool:
+               now: float, thief_alive: bool = True) -> bool:
         """Safeguard (c): reject stale steals after the victim refilled
-        below the imbalance threshold."""
-        if victim_queue_len == 0:
+        below the imbalance threshold, or whose thief died, for callers
+        where decision and acceptance are asynchronous (a real serving
+        engine).  The simulator calls this in the same epoch tick as
+        maybe_steal, so there the checks cannot fire — its genuinely
+        asynchronous window is the KV transfer, handled by the
+        dead-destination re-route in ``_on_migr_done``."""
+        if victim_queue_len == 0 or not thief_alive:
             self.rejected_stale += 1
             return False
         return True

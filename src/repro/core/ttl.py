@@ -13,6 +13,7 @@ Eq. 6:  m = max(0, (used - th_low) / (th_high - th_low)),
 from __future__ import annotations
 
 import math
+from bisect import bisect_left, insort
 from typing import Dict, List, Sequence, Tuple
 
 
@@ -35,12 +36,15 @@ def fit_lognormal(history: Sequence[float]) -> Tuple[float, float]:
     return mu, math.sqrt(max(var, 1e-12))
 
 
+def _pct_index(n: int, p: float) -> int:
+    return min(n - 1, max(0, int(math.ceil(p / 100.0 * n)) - 1))
+
+
 def percentile(history: Sequence[float], p: float) -> float:
     if not history:
         return 0.0
     xs = sorted(history)
-    idx = min(len(xs) - 1, max(0, int(math.ceil(p / 100.0 * len(xs))) - 1))
-    return xs[idx]
+    return xs[_pct_index(len(xs), p)]
 
 
 class ToolTTLPolicy:
@@ -59,21 +63,54 @@ class ToolTTLPolicy:
         self.p = p
         self.ttl_max = ttl_max_s
         self.min_samples = min_samples
-        self.hist: Dict[str, List[float]] = {}
+        self._hist: Dict[str, List[float]] = {}
+        # incrementally-maintained sorted view of each history.  TTL
+        # queries interleave 1:1 with observations on the step hot
+        # path, so re-sorting per query was O(n log n) per LLM step.
+        # Wholesale ``hist`` assignment (checkpoint restore, tests)
+        # clears the cache via the property setter; each entry also
+        # holds the backing list and compares it by identity (``is``),
+        # so per-key replacement — even one that reuses a freed list's
+        # address — can never serve a stale sort.
+        self._sorted: Dict[str, Tuple[List[float], List[float]]] = {}
+
+    @property
+    def hist(self) -> Dict[str, List[float]]:
+        return self._hist
+
+    @hist.setter
+    def hist(self, value: Dict[str, List[float]]) -> None:
+        self._hist = value
+        self._sorted.clear()
+
+    def _sorted_hist(self, tool: str, h: List[float]) -> List[float]:
+        cached = self._sorted.get(tool)
+        if cached is not None and cached[0] is h \
+                and len(cached[1]) == len(h):
+            return cached[1]
+        s = sorted(h)
+        self._sorted[tool] = (h, s)
+        return s
 
     def observe(self, tool: str, latency_s: float,
                 max_hist: int = 4096) -> None:
         h = self.hist.setdefault(tool, [])
+        s = self._sorted_hist(tool, h)   # sync BEFORE mutating h
         h.append(latency_s)
+        insort(s, latency_s)
         if len(h) > max_hist:
+            for x in h[:len(h) - max_hist]:
+                s.pop(bisect_left(s, x))
             del h[:len(h) - max_hist]
+        self._sorted[tool] = (h, s)
 
     def ttl(self, tool: str, mem_pressure: float,
             default_s: float = 30.0) -> float:
         """Algorithm 1.  mem_pressure = Eq. 6's m in [0,1]."""
         h = self.hist.get(tool, [])
         if len(h) >= self.min_samples:
-            ttl_base = percentile(h, self.p)
+            xs = self._sorted_hist(tool, h)
+            ttl_base = xs[_pct_index(len(xs), self.p)]
         elif h:
             mu, sigma = fit_lognormal(h)
             z = self.Z95 * (self.p / 95.0)

@@ -122,24 +122,52 @@ class WALRUCache:
         return 0.5    # no AEG: graceful degradation toward LRU
 
     def select_victim(self, now: float) -> Optional[CacheEntry]:
-        cands = [e for e in self.entries.values() if not e.pinned]
-        if not cands:
+        # Two indexed passes over the live dict — no candidate-list
+        # rebuilds.  Eviction loops call this once per victim, so the
+        # three list allocations the old version made per call dominated
+        # eviction storms on big pools.  First pass: normalizers.
+        tau_max = 0.0
+        size_max = 0.0
+        n = 0
+        for e in self.entries.values():
+            if e.pinned:
+                continue
+            n += 1
+            age = now - e.t_last
+            if age > tau_max:
+                tau_max = age
+            if e.size_bytes > size_max:
+                size_max = e.size_bytes
+        if n == 0:
             return None
-        tau_max = max((now - e.t_last) for e in cands) or 1.0
-        size_max = max(e.size_bytes for e in cands) or 1.0
-        return max(cands,
-                   key=lambda e: self.p_evict(e, now, tau_max, size_max))
+        tau_max = tau_max or 1.0
+        size_max = size_max or 1.0
+        best: Optional[CacheEntry] = None
+        best_p = -1.0
+        for e in self.entries.values():
+            if e.pinned:
+                continue
+            p = self.p_evict(e, now, tau_max, size_max)
+            if best is None or p > best_p:
+                best, best_p = e, p
+        return best
 
 
 # --- baseline policies (for Table 2 / ablations) ---------------------------
+def _lru_victim(entries) -> Optional[CacheEntry]:
+    """Single-pass oldest-unpinned scan (shared by the LRU variants)."""
+    best: Optional[CacheEntry] = None
+    for e in entries.values():
+        if not e.pinned and (best is None or e.t_last < best.t_last):
+            best = e
+    return best
+
+
 class LRUCache(WALRUCache):
     """Standard LRU: evict the least-recently-used entry."""
 
     def select_victim(self, now: float):
-        cands = [e for e in self.entries.values() if not e.pinned]
-        if not cands:
-            return None
-        return min(cands, key=lambda e: e.t_last)
+        return _lru_victim(self.entries)
 
 
 class PrefixLRUCache(WALRUCache):
@@ -155,7 +183,4 @@ class PrefixLRUCache(WALRUCache):
         self.prefix_fraction = prefix_fraction
 
     def select_victim(self, now: float):
-        cands = [e for e in self.entries.values() if not e.pinned]
-        if not cands:
-            return None
-        return min(cands, key=lambda e: e.t_last)
+        return _lru_victim(self.entries)

@@ -1,6 +1,12 @@
 """Property-based tests (hypothesis) for SAGA's invariants."""
 import math
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: pip install hypothesis (or .[test])")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aeg import AEG, ToolStats

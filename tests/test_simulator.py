@@ -81,6 +81,7 @@ def test_multi_tenant_fairness_direction():
         vllm["slo_by_tenant"].get("light", 0)
 
 
+@pytest.mark.slow
 def test_bfs_dfs_tradeoff():
     """Table 8: DFS minimizes evictions (depth-first admission keeps the
     working set tiny under memory pressure); BFS floods the pool."""
