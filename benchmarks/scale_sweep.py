@@ -1,6 +1,6 @@
 """256-worker scale sweep: event-loop hot-path overhead + conservation.
 
-Three measurements:
+Measurements:
   1. queue microbench — the per-worker pending-step queue under a
      recorded push/pop/steal op trace: heap (current) vs the legacy
      sort-per-enqueue list it replaced.
@@ -10,22 +10,38 @@ Three measurements:
   3. chaos conservation — the 256-worker run repeated under a random
      fail/recover/scale-up plan; asserts every admitted task finished
      exactly once and no KV/slot accounting leaked.
+  4. epoch-tick A/B — the incremental epoch tick (indexed idle set,
+     delta-updated AFS columns, numpy load vector) vs a faithful
+     re-implementation of the PR-1 path (per-epoch O(n_workers) scans,
+     invalidate-and-rebuild AFS columns), under clean AND adversarial
+     (chaos + straggler + preemption-storm) load.
+  5. adversarial conservation — stragglers and preemption storms on
+     top of chaos at 256 workers; ``check_conservation`` gates it.
 
     PYTHONPATH=src:. python benchmarks/scale_sweep.py [--full]
+    PYTHONPATH=src:. python benchmarks/scale_sweep.py --smoke   # CI job
 
 CSV rows follow the house format: ``name,us_per_call,derived``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import random
+import subprocess
+import sys
 import time
+from typing import Dict, List, NamedTuple
+
+import numpy as np
 
 from repro.cluster import baselines as B
-from repro.cluster.faults import chaos_plan
+from repro.cluster.faults import chaos_plan, preemption_storm_plan, \
+    straggler_plan
 from repro.cluster.simulator import ClusterSim, StepJob, StepQueue, \
-    summarize
+    _QueueView, summarize
 from repro.cluster.workload import Task, scale_workload
+from repro.core.afs import AFSScheduler
 
 from benchmarks.common import emit, save_json
 
@@ -68,6 +84,138 @@ class LegacySortQueue:
     def snapshot(self):
         return sorted((j.enqueued_at, j.task.task_id)
                       for _, _, _, j in self._items)
+
+
+class _LegacyTaskCols(NamedTuple):
+    deadlines: "np.ndarray"
+    works: "np.ndarray"
+    tenant_idx: "np.ndarray"
+    names: List[str]
+    row_of: Dict[str, int]
+
+
+class LegacyAFSScheduler(AFSScheduler):
+    """PR-1's cached-column AFS path, kept here (not in src) purely as
+    the epoch-tick A/B baseline: columns are rebuilt with a Python loop
+    whenever a task was admitted since the last epoch (invalidate-on-
+    add), instead of being persistent delta-updated arrays."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._cols = None
+
+    def add_task(self, tp):
+        self.tasks[tp.task_id] = tp
+        from repro.core.afs import TenantState
+        self.tenants.setdefault(tp.tenant, TenantState(tp.tenant))
+        self._cols = None
+
+    def finish_task(self, task_id):
+        if self.tasks.pop(task_id, None) is not None:
+            if self._cols is not None and task_id in self._cols.row_of:
+                self._cols.works[self._cols.row_of[task_id]] = 0.0
+            else:
+                self._cols = None
+
+    def note_service(self, tenant, gpu_seconds):
+        from repro.core.afs import TenantState
+        if tenant not in self.tenants:
+            self.tenants[tenant] = TenantState(tenant)
+            self._cols = None
+        self.tenants[tenant].service_s += gpu_seconds
+
+    def note_progress(self, task_id, work_done_s):
+        t = self.tasks.get(task_id)
+        if t:
+            t.work_remain_s = max(0.0, t.work_remain_s - work_done_s)
+            if self._cols is not None and task_id in self._cols.row_of:
+                self._cols.works[self._cols.row_of[task_id]] = \
+                    t.work_remain_s
+            else:
+                self._cols = None
+
+    def recompute(self, now):
+        if self.tasks:
+            if self._cols is None:
+                names = list(self.tenants)
+                tidx = {k: i for i, k in enumerate(names)}
+                self._cols = _LegacyTaskCols(
+                    np.array([t.deadline for t in self.tasks.values()]),
+                    np.array([t.work_remain_s
+                              for t in self.tasks.values()]),
+                    np.array([tidx[t.tenant]
+                              for t in self.tasks.values()]),
+                    names,
+                    {k: i for i, k in enumerate(self.tasks)},
+                )
+            c = self._cols
+            slack = np.maximum(c.deadlines - now, self.epoch_s)
+            acc_v = np.bincount(c.tenant_idx, weights=c.works / slack,
+                                minlength=len(c.names))
+            acc = dict(zip(c.names, acc_v.tolist()))
+        else:
+            acc = dict.fromkeys(self.tenants, 0.0)
+        return self._shares_from(acc, write=True)
+
+
+class LegacyEpochSim(ClusterSim):
+    """PR-1's epoch tick: a fresh Python load list, fresh queue views,
+    a fresh alive list, and a full worker scan to refresh the stealer's
+    idle state — every 100 ms — plus the invalidate-and-rebuild AFS.
+    Steal execution and everything outside the tick use current code,
+    so the A/B isolates the tick itself."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        legacy = LegacyAFSScheduler(self.co.cfg.epoch_s,
+                                    self.co.cfg.preempt_block_s)
+        self.co.afs = legacy    # before run(): nothing registered yet
+
+    def _epoch_decide(self):
+        loads = [w.load(self.perf.max_batch) for w in self.workers]
+        if self.policy.saga.enable_stealing:
+            queues = [_QueueView(w) for w in self.workers]
+        else:
+            queues = [[]] * len(self.workers)
+        alive = [w.alive for w in self.workers]
+        decision, _ = self.co.epoch_tick(self.now, loads, queues,
+                                         alive=alive, scan_queues=True)
+        return decision
+
+
+class _EpochTimerMixin:
+    """Accumulates wall time spent inside the epoch-tick decision."""
+    epoch_time = 0.0
+    epoch_calls = 0
+
+    def _epoch_decide(self):
+        t0 = time.perf_counter()
+        d = super()._epoch_decide()
+        self.epoch_time += time.perf_counter() - t0
+        self.epoch_calls += 1
+        return d
+
+
+class TimedSim(_EpochTimerMixin, ClusterSim):
+    pass
+
+
+class TimedLegacySim(_EpochTimerMixin, LegacyEpochSim):
+    pass
+
+
+def adversarial_plan(n_workers: int, horizon_s: float, seed: int = 0):
+    """Chaos + stragglers + preemption storms, merged and sorted."""
+    plan = chaos_plan(n_workers, horizon_s=horizon_s * 0.7,
+                      n_events=16, seed=seed + 1)
+    plan += straggler_plan(n_workers, horizon_s=horizon_s * 0.8,
+                           n_stragglers=max(2, n_workers // 32),
+                           slow_for_s=horizon_s * 0.15, seed=seed + 2)
+    plan += preemption_storm_plan(n_workers, horizon_s=horizon_s,
+                                  n_storms=2, kill_frac=0.33,
+                                  downtime_s=horizon_s * 0.08,
+                                  seed=seed + 3)
+    return sorted(plan)
 
 
 def _op_trace(n_ops: int, depth: int, seed: int):
@@ -175,18 +323,135 @@ def bench_sim_scale(n_workers: int, tasks_per_worker: float,
             "n_tasks": s["n_tasks"]}
 
 
+def bench_epoch_ab(n_workers: int, tasks_per_worker: float = 1.5,
+                   seed: int = 0, adversarial: bool = False,
+                   repeats: int = 3):
+    """Incremental vs PR-1 epoch tick, identical workload.  Reports
+    us per epoch-tick decision for each and the speedup."""
+    horizon = 600.0
+    tasks = scale_workload(n_workers, tasks_per_worker, seed=seed,
+                           horizon_s=horizon)
+    plan = adversarial_plan(n_workers, horizon, seed=seed) \
+        if adversarial else None
+    rows = {}
+    for tag, cls in (("incr", TimedSim), ("legacy", TimedLegacySim)):
+        best = float("inf")
+        for _ in range(max(repeats, 1)):
+            sim = cls(tasks, B.saga(), n_workers=n_workers, seed=seed,
+                      fault_plan=plan)
+            sim.run(horizon_s=86400)
+            if sim.epoch_calls and sim.epoch_time / sim.epoch_calls < best:
+                best = sim.epoch_time / sim.epoch_calls
+                kept = sim
+        kept.check_conservation()
+        rows[tag] = {"us_per_tick": best * 1e6,
+                     "epochs": kept.epoch_calls,
+                     "events": kept.events_processed}
+    speedup = rows["legacy"]["us_per_tick"] / rows["incr"]["us_per_tick"]
+    mode = "adversarial" if adversarial else "clean"
+    emit(f"scale/epoch_tick_{n_workers}_{mode}",
+         rows["incr"]["us_per_tick"] * 1e-6,
+         f"incr={rows['incr']['us_per_tick']:.1f}us/tick "
+         f"legacy={rows['legacy']['us_per_tick']:.1f}us/tick "
+         f"speedup={speedup:.2f}x")
+    return {"n_workers": n_workers, "mode": mode, "speedup": speedup,
+            **{f"{k}_{m}": v for k, r in rows.items()
+               for m, v in r.items()}}
+
+
+def bench_adversarial(n_workers: int, tasks_per_worker: float = 1.5,
+                      seed: int = 0):
+    """Conservation + overhead under chaos + stragglers + preemption
+    storms at cluster scale."""
+    horizon = 600.0
+    tasks = scale_workload(n_workers, tasks_per_worker, seed=seed,
+                           horizon_s=horizon, burst_frac=0.3)
+    plan = adversarial_plan(n_workers, horizon, seed=seed)
+    sim = ClusterSim(tasks, B.saga(), n_workers=n_workers, seed=seed,
+                     fault_plan=plan)
+    t0 = time.perf_counter()
+    sim.run(horizon_s=86400)
+    wall = time.perf_counter() - t0
+    sim.check_conservation()
+    s = summarize(sim)
+    assert s["n_tasks"] == len(tasks)
+    us_ev = wall / max(sim.events_processed, 1) * 1e6
+    emit(f"scale/sim{n_workers}_adversarial", wall,
+         f"events={sim.events_processed} {us_ev:.1f}us/event "
+         f"migr/task={s['migrations_per_task']:.2f}")
+    return {"n_workers": n_workers, "tag": "adversarial", "wall_s": wall,
+            "events": sim.events_processed, "us_per_event": us_ev,
+            "n_tasks": s["n_tasks"]}
+
+
+def _smoke_summary(n_workers: int = 32, seed: int = 0) -> str:
+    """One deterministic adversarial run; the repr is the determinism
+    fingerprint compared across runs and processes."""
+    horizon = 240.0
+    tasks = scale_workload(n_workers, 2.0, seed=seed, horizon_s=horizon,
+                           burst_frac=0.4)
+    plan = adversarial_plan(n_workers, horizon, seed=seed)
+    sim = ClusterSim(tasks, B.saga(), n_workers=n_workers, seed=seed,
+                     fault_plan=plan)
+    sim.run(horizon_s=86400)
+    sim.check_conservation()
+    s = summarize(sim)
+    assert s["n_tasks"] == len(tasks)
+    return repr(s)
+
+
+def smoke() -> None:
+    """Fast CI gate: conservation under chaos + straggler + preemption
+    storms, plus byte-identical dual-run summaries (in-process AND
+    across processes with different PYTHONHASHSEED) so determinism
+    breaks fail in CI, not in review."""
+    bench_queue_impls(n_ops=2000)
+    a = _smoke_summary()
+    b = _smoke_summary()
+    assert a == b, "same-process identical-seed runs diverged"
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        r = subprocess.run([sys.executable, __file__, "--smoke-emit"],
+                           env=env, capture_output=True, text=True,
+                           timeout=600)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1], "cross-process summaries diverged"
+    assert a + "\n" == outs[0], "parent/child summaries diverged"
+    ab = bench_epoch_ab(64, repeats=1)
+    print(f"smoke ok: conservation + determinism green, "
+          f"epoch-tick speedup {ab['speedup']:.2f}x at 64 workers")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="also run 64/128-worker points")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: conservation + determinism")
+    ap.add_argument("--smoke-emit", action="store_true",
+                    help="internal: print the smoke summary fingerprint")
     ap.add_argument("--tasks-per-worker", type=float, default=1.5)
     args = ap.parse_args()
-    out = {"queue": bench_queue_impls(), "sims": []}
+    if args.smoke_emit:
+        print(_smoke_summary())
+        return
+    if args.smoke:
+        smoke()
+        return
+    out = {"queue": bench_queue_impls(), "sims": [], "epoch_ab": []}
     sizes = [64, 128, 256] if args.full else [256]
     for n in sizes:
         out["sims"].append(bench_sim_scale(n, args.tasks_per_worker))
     out["sims"].append(bench_sim_scale(256, args.tasks_per_worker,
                                        fault=True))
+    out["sims"].append(bench_adversarial(256, args.tasks_per_worker))
+    # epoch-tick A/B: the PR's headline — incremental vs PR-1 tick
+    out["epoch_ab"].append(bench_epoch_ab(256, args.tasks_per_worker))
+    out["epoch_ab"].append(bench_epoch_ab(256, args.tasks_per_worker,
+                                          adversarial=True))
     # head-to-head under queue pressure: heap vs legacy sort-per-enqueue
     heap = bench_sim_scale(256, args.tasks_per_worker, pressured=True,
                            tag_extra="_pressure_heap", repeats=3)

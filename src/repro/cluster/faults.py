@@ -4,9 +4,12 @@ Produces fault plans consumed by ``ClusterSim(fault_plan=...)``:
   ("fail", w)     worker w dies: queue requeued, KV lost, affinity dropped
   ("recover", w)  worker returns empty-cached
   ("scale_up", 0) elastic scale-out: a fresh worker joins
+  ("slow", w)     worker w becomes a straggler (rates / slowdown factor)
+  ("heal", w)     straggler returns to full speed
 
 Also provides straggler injection (a slow worker = reduced rates), which
-exercises the paper's own mitigation (work stealing, §5.2).
+exercises the paper's own mitigation (work stealing, §5.2), and
+preemption storms (spot-reclamation-style simultaneous mass kills).
 """
 from __future__ import annotations
 
@@ -71,6 +74,52 @@ def chaos_plan(n_workers: int, horizon_s: float, n_events: int = 20,
             alive.add(next_id)
             next_id += 1
     return plan
+
+
+def straggler_plan(n_workers: int, horizon_s: float, n_stragglers: int = 2,
+                   slow_for_s: float = 120.0, seed: int = 0) -> Plan:
+    """Transient stragglers: each picked worker serves at reduced rates
+    (``ClusterSim.straggler_slowdown``) for ``slow_for_s``, then heals.
+    Work stealing (§5.2) should drain the slow worker's queue onto
+    healthy peers, bounding p99 TCT."""
+    rng = random.Random(seed)
+    plan: Plan = []
+    # distinct workers: overlapping slow windows on one worker would be
+    # cancelled early by the first heal (the sim keeps one factor per
+    # worker), silently weakening the injected pressure
+    for w in rng.sample(range(n_workers), min(n_stragglers, n_workers)):
+        t = rng.uniform(0.15, 0.6) * horizon_s
+        plan.append((t, "slow", w))
+        plan.append((t + slow_for_s, "heal", w))
+    return sorted(plan)
+
+
+def preemption_storm_plan(n_workers: int, horizon_s: float,
+                          n_storms: int = 2, kill_frac: float = 0.5,
+                          downtime_s: float = 60.0, seed: int = 0,
+                          min_alive: int = 1) -> Plan:
+    """Spot-reclamation storms: at each storm instant a random
+    ``kill_frac`` of the live workers fail *simultaneously* (mass
+    in-flight cancellation + requeue onto the survivors), then recover
+    together after ``downtime_s``.  At least ``min_alive`` workers stay
+    up so the cluster can absorb the displaced work.  Storms are spaced
+    so a storm never fires while the previous one's victims are still
+    down (plans stay executable: only live workers fail)."""
+    rng = random.Random(seed)
+    plan: Plan = []
+    gap = max((horizon_s * 0.6) / max(n_storms, 1), downtime_s * 1.5)
+    t = 0.2 * horizon_s
+    for _ in range(n_storms):
+        if t >= horizon_s:
+            break
+        workers = list(range(n_workers))
+        rng.shuffle(workers)
+        n_kill = min(int(n_workers * kill_frac), n_workers - min_alive)
+        for w in workers[:n_kill]:
+            plan.append((t, "fail", w))
+            plan.append((t + downtime_s, "recover", w))
+        t += gap
+    return sorted(plan)
 
 
 class StragglerInjector:

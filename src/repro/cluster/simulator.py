@@ -44,6 +44,31 @@ dead worker can never be picked as a thief, a victim, a routing target
 or a migration destination.  If *every* worker is dead, steps park in
 an orphan buffer and re-enqueue on the next recover/scale-up.
 
+Incremental epoch tick
+----------------------
+The 100 ms epoch tick (AFS shares + steal decision) is O(changes), not
+O(cluster size).  Every structure it consumes is maintained at the
+event sites that mutate it:
+
+  * ``_loadnum`` — integer active+queued count per worker, turned into
+    the float load vector by one C-level numpy division (exact: same
+    IEEE result as ``WorkerState.load``), dead workers masked to inf;
+  * the stealer's ``idle_since`` dict — the indexed idle-worker set,
+    entered/left on queue-depth transitions (empty<->nonempty), with
+    exact transition times instead of epoch-quantized ones;
+  * ``_nonempty`` — the victim-candidate index (workers with pending
+    queue work), so the steal scan never walks all workers;
+  * persistent ``_QueueView``/alive lists — zero per-epoch allocation;
+  * AFS columns — persistent, delta-updated (see ``repro.core.afs``).
+
+``check_conservation`` cross-checks every mirror against ground truth,
+so index drift fails loudly rather than skewing scheduling silently.
+
+Straggler injection: a ``StragglerInjector`` (static) and/or
+``("slow", w)`` / ``("heal", w)`` plan events (dynamic) scale worker
+``w``'s service rates by ``straggler_slowdown``; work stealing is the
+paper's own mitigation (§5.2).
+
 Determinism: all randomness flows through one seeded ``random.Random``;
 string hashing (``group`` routing) uses a stable FNV-1a hash, so two
 identical-seed runs produce byte-identical ``summarize()`` output even
@@ -56,6 +81,11 @@ import itertools
 import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
+
+try:
+    import numpy as np
+except ImportError:          # pragma: no cover - numpy ships with repo
+    np = None
 
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.cluster.perf import PerfModel
@@ -166,25 +196,27 @@ class StepQueue:
 
 
 class _QueueView:
-    """Lazy stealer-facing view of a StepQueue.  The epoch tick hands
-    one per worker to ``WorkStealer``; emptiness checks are O(1) and
-    the sorted (enqueued_at, session_id) dump is built only if the
-    stealer actually iterates this worker's queue (i.e. it became the
-    victim) — not for all n_workers queues every 100 ms."""
+    """Lazy stealer-facing view of a worker's StepQueue.  Built once per
+    worker at sim construction (the epoch tick reuses the same list
+    every 100 ms — zero per-epoch allocation); emptiness checks are
+    O(1) and the sorted (enqueued_at, session_id) dump is built only if
+    the stealer actually iterates this worker's queue (i.e. it became
+    the victim).  Wraps the WorkerState, not the queue object, so
+    benchmark harnesses that swap ``ws.queue`` stay visible."""
 
-    __slots__ = ("_q",)
+    __slots__ = ("_ws",)
 
-    def __init__(self, q) -> None:
-        self._q = q
+    def __init__(self, ws) -> None:
+        self._ws = ws
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._ws.queue)
 
     def __bool__(self) -> bool:
-        return bool(self._q)
+        return bool(self._ws.queue)
 
     def __iter__(self):
-        return iter(self._q.snapshot())
+        return iter(self._ws.queue.snapshot())
 
 
 @dataclass
@@ -244,7 +276,9 @@ class ClusterSim:
     def __init__(self, tasks: Sequence[Task], policy: SimPolicy,
                  n_workers: int = 16, perf: Optional[PerfModel] = None,
                  seed: int = 0,
-                 fault_plan: Optional[Sequence[Tuple[float, str, int]]] = None):
+                 fault_plan: Optional[Sequence[Tuple[float, str, int]]] = None,
+                 straggler: Optional[object] = None,
+                 straggler_slowdown: float = 4.0):
         self.tasks = {t.task_id: t for t in tasks}
         self.policy = policy
         self.perf = perf or PerfModel()
@@ -276,7 +310,32 @@ class ClusterSim:
         self._orphans: List[StepJob] = []      # steps with no live worker
         # group routing: stable FNV-1a hash of the session prefix
         self._group_worker: Dict[str, int] = {}
+        # incremental epoch-tick state (O(changes) instead of O(cluster)):
+        #   _loadnum[w]   int active+queued steps, mirrored at every
+        #                 slot/queue transition (ints: no float drift)
+        #   _nonempty     indexed set of workers with pending queue work
+        #                 (the stealer's victim candidates)
+        #   _queue_views  persistent stealer-facing views (no per-epoch
+        #                 list builds)
+        #   _active_kv_total  running sum of in-flight KV reservations
+        self._max_batch = self.perf.max_batch
+        if np is not None:
+            self._loadnum = np.zeros(n_workers, dtype=np.int64)
+            self._alive_np = np.ones(n_workers, dtype=bool)
+        self._alive_list = [True] * n_workers
+        self._n_dead = 0
+        self._nonempty: set = set()
+        self._queue_views = [_QueueView(ws) for ws in self.workers]
+        self._active_kv_total = 0.0
+        # straggler injection: static injector (factor(w) >= 1 slows
+        # worker w) composed with dynamic ("slow"/"heal") plan events
+        self.straggler = straggler
+        self.straggler_slowdown = straggler_slowdown
+        self._slow: Dict[int, float] = {}
         self._started = False
+        # all queues start empty: seed the indexed idle set at t=0
+        for w in range(n_workers):
+            self.co.on_worker_idle(w, 0.0)
 
     # -- event plumbing ----------------------------------------------------
     def _push(self, t: float, kind: str, args: tuple = ()) -> None:
@@ -315,32 +374,89 @@ class ClusterSim:
             len(self.metrics) == len(self.tasks) and not self.admission_queue
 
     def _sample_mem(self, t: float) -> None:
-        # Throttled to the epoch period: the sums below are O(n_workers),
-        # and sampling them on every event dominated the event loop at
-        # 256 workers.  Epoch events fire every epoch_s anyway, so the
-        # time-weighted average keeps epoch resolution.
+        # Throttled to the epoch period, and O(1): the coordinator keeps
+        # a running total of cached pool bytes (``pools_used``) and the
+        # sim a running total of in-flight KV reservations, so sampling
+        # no longer sums over every worker (which re-dominated the event
+        # loop at 256 workers once the epoch tick went incremental).
         dt = t - self._last_mem_t
         if dt < self._mem_min_dt - 1e-9:   # tolerance: epoch times are
             return                         # accumulated floats
-        util = (sum(p.used for p in self.co.pools) +
-                sum(w.active_kv for w in self.workers)) / \
+        util = (self.co.pools_used + self._active_kv_total) / \
             (self.co.capacity * self.n_workers)
         self.mem_samples.append((dt, util))
         self._last_mem_t = t
 
     # -- helpers -------------------------------------------------------------
-    def _loads(self) -> List[float]:
-        return [w.load(self.perf.max_batch) for w in self.workers]
+    def _loads(self):
+        """Per-worker load vector.  With numpy: one C-level division of
+        the incrementally-maintained integer slot+queue counts (exact —
+        bit-identical to ``WorkerState.load``); dead workers masked to
+        inf.  Fallback: the legacy python list comprehension."""
+        if np is None:
+            return [w.load(self._max_batch) for w in self.workers]
+        loads = self._loadnum / self._max_batch
+        if self._n_dead:
+            loads[~self._alive_np] = INF
+        return loads
 
-    def _least_loaded(self, loads: Sequence[float]) -> int:
+    def _load_delta(self, w: int, delta: int) -> None:
+        if np is not None:
+            self._loadnum[w] += delta
+
+    def _least_loaded(self, loads) -> int:
         """Deterministic least-loaded pick: seeded-RNG tie-break among
         exact-minimum workers (spreads equal-load ties without the
         per-candidate RNG draws the old ``min(key=...)`` made)."""
+        if np is not None and isinstance(loads, np.ndarray):
+            ties = np.flatnonzero(loads == loads.min())
+            if len(ties) == 1:
+                return int(ties[0])
+            return int(ties[self.rng.randrange(len(ties))])
         lo = min(loads)
         ties = [i for i, l in enumerate(loads) if l == lo]
         if len(ties) == 1:
             return ties[0]
         return ties[self.rng.randrange(len(ties))]
+
+    def _speed_factor(self, w: int) -> float:
+        """Straggler slowdown for worker ``w`` (1.0 = healthy).  Static
+        injector factors compose with dynamic slow/heal plan events."""
+        f = self._slow.get(w, 1.0)
+        if self.straggler is not None:
+            f *= self.straggler.factor(w)
+        return f
+
+    # -- queue transitions (the indexed idle/victim bookkeeping) ----------
+    def _queue_pop(self, w: int) -> Optional[StepJob]:
+        job = self.workers[w].queue.pop()
+        if job is not None:
+            self._load_delta(w, -1)
+            if not self.workers[w].queue:
+                self._queue_went_empty(w)
+        return job
+
+    def _queue_remove(self, w: int, session_id: str) -> Optional[StepJob]:
+        job = self.workers[w].queue.remove(session_id)
+        if job is not None:
+            self._load_delta(w, -1)
+            if not self.workers[w].queue:
+                self._queue_went_empty(w)
+        return job
+
+    def _queue_drain(self, w: int) -> List[StepJob]:
+        jobs = self.workers[w].queue.drain()
+        if jobs:
+            self._load_delta(w, -len(jobs))
+        self._nonempty.discard(w)
+        # no idle-set entry: draining only happens on worker failure,
+        # and the coordinator evicts dead workers from the idle set
+        return jobs
+
+    def _queue_went_empty(self, w: int) -> None:
+        self._nonempty.discard(w)
+        if self.workers[w].alive:
+            self.co.on_worker_idle(w, self.now)
 
     def _route(self, task: Task) -> int:
         mode = self.policy.routing
@@ -417,7 +533,12 @@ class ClusterSim:
             prio = -self.co.afs.priority(job.task.tenant)
         else:
             prio = job.enqueued_at
-        self.workers[w].queue.push(prio, next(self._seq), job)
+        ws = self.workers[w]
+        if not ws.queue:               # empty -> nonempty transition
+            self._nonempty.add(w)
+            self.co.on_worker_busy(w)
+        ws.queue.push(prio, next(self._seq), job)
+        self._load_delta(w, 1)
 
     def _enqueue_step(self, job: StepJob,
                       worker: Optional[int] = None) -> None:
@@ -435,6 +556,7 @@ class ClusterSim:
         ws = self.workers[w]
         if self._can_admit(w, job):
             ws.active += 1
+            self._load_delta(w, 1)
             self._start_step(job)
         else:
             self._queue_push(w, job)
@@ -448,7 +570,10 @@ class ClusterSim:
                                 ctx * self.perf.kv_bytes_per_token, self.now)
         hit, pf_extra, bg_tokens = self.co.on_step_start(
             task.task_id, w, ctx, self.now)
-        rate = self.perf.prefill_tokens_per_s
+        # straggler injection: a slow worker serves both phases at
+        # rate / factor (§5.2 — stealing should drain it)
+        factor = self._speed_factor(w)
+        rate = self.perf.prefill_tokens_per_s / factor
         # prefill is compute-bound and serializes per worker; decode slots
         # run in parallel (continuous batching is memory-bound).
         pf_tokens = pf_extra if hit else pf_extra + step.new_prompt_tokens
@@ -466,13 +591,14 @@ class ClusterSim:
         pf_start = max(self.now, ws.prefill_free_at)
         pf_dur = pf_tokens / rate
         ws.prefill_free_at = pf_start + pf_dur
-        decode_dur = step.out_tokens / self.perf.decode_tokens_per_s
+        decode_dur = step.out_tokens * factor / self.perf.decode_tokens_per_s
         done = pf_start + pf_dur + decode_dur
         busy = pf_dur + decode_dur
         ws.busy_s += busy
         ws.regen_s += regen / rate
         kv_bytes = ctx * self.perf.kv_bytes_per_token
         ws.active_kv += kv_bytes
+        self._active_kv_total += kv_bytes
         self.metrics[task.task_id].regen_tokens += regen
         attempt = next(self._attempt)
         self.inflight[task.task_id] = InFlightStep(
@@ -490,7 +616,9 @@ class ClusterSim:
         task = self.tasks[task_id]
         ws = self.workers[w]
         ws.active -= 1
+        self._load_delta(w, -1)
         ws.active_kv -= rec.kv_bytes
+        self._active_kv_total -= rec.kv_bytes
         if ws.active < 0 or ws.active_kv < -self._kv_tol:
             raise RuntimeError(
                 f"conservation violated on worker {w}: "
@@ -532,26 +660,35 @@ class ClusterSim:
             job = ws.queue.peek()
             if job is None or not self._can_admit(w, job):
                 break
-            ws.queue.pop()
+            self._queue_pop(w)
             ws.active += 1
+            self._load_delta(w, 1)
             self._start_step(job)
 
     # -- epoch: AFS + work stealing ------------------------------------------
-    def _on_epoch(self) -> None:
+    def _epoch_decide(self):
+        """O(changes) epoch tick: the load vector is one C division of
+        incrementally-maintained counts, the stealer consults the
+        indexed idle set and the nonempty-queue index (no cluster-wide
+        scans), queue views and the alive list are persistent, and the
+        AFS recompute runs over persistent delta-updated columns.
+        Overridable hook: ``benchmarks/scale_sweep.py`` swaps in the
+        legacy O(n_workers) variant as the A/B baseline."""
         loads = self._loads()
-        if self.policy.saga.enable_stealing:
-            queues = [_QueueView(w.queue) for w in self.workers]
-        else:
-            queues: List[list] = [[]] * len(self.workers)
-        alive = [w.alive for w in self.workers]
-        decision, _ = self.co.epoch_tick(self.now, loads, queues,
-                                         alive=alive)
+        decision, _ = self.co.epoch_tick(
+            self.now, loads, self._queue_views, alive=self._alive_list,
+            victim_candidates=self._nonempty, scan_queues=False)
+        return decision
+
+    def _on_epoch(self) -> None:
+        decision = self._epoch_decide()
         if decision is not None:
             vq = self.workers[decision.victim].queue
             if self.co.stealer.accept(
                     decision, len(vq), self.now,
                     thief_alive=self.workers[decision.thief].alive):
-                job = vq.remove(decision.session_id)
+                job = self._queue_remove(decision.victim,
+                                         decision.session_id)
                 if job is not None:
                     mig = self.perf.sample_migration_s(self.rng)
                     self.migrations += 1
@@ -606,7 +743,9 @@ class ClusterSim:
         for tid in victims:
             rec = self.inflight.pop(tid)
             ws.active -= 1
+            self._load_delta(w, -1)
             ws.active_kv -= rec.kv_bytes
+            self._active_kv_total -= rec.kv_bytes
             refund = min(rec.busy_charged,
                          max(0.0, rec.finish - self.now))
             ws.busy_s -= refund
@@ -629,13 +768,18 @@ class ClusterSim:
         if not ws.alive:
             return                           # already down
         ws.alive = False
+        self._alive_list[w] = False
+        self._n_dead += 1
+        if np is not None:
+            self._alive_np[w] = False
         self.co.worker_failed(w)
-        requeue = ws.queue.drain()
+        requeue = self._queue_drain(w)
         requeue.extend(self._cancel_inflight_on(w))
         if ws.active != 0 or abs(ws.active_kv) > self._kv_tol:
             raise RuntimeError(
                 f"worker {w} lifecycle leak at failure: "
                 f"active={ws.active} active_kv={ws.active_kv}")
+        self._active_kv_total -= ws.active_kv    # float dust parity
         ws.active = 0
         ws.active_kv = 0.0
         ws.prefill_free_at = 0.0             # prefill pipeline dies too
@@ -643,15 +787,38 @@ class ClusterSim:
             self._enqueue_step(StepJob(job.task, job.step_idx, self.now))
 
     def _on_recover(self, w: int) -> None:
+        if self.workers[w].alive:
+            return                           # already up (storm overlap)
         self.workers[w].alive = True
-        self.co.worker_recovered(w)
+        self._alive_list[w] = True
+        self._n_dead -= 1
+        if np is not None:
+            self._alive_np[w] = True
+        self.co.worker_recovered(w, self.now)
         self._readmit_orphans()
 
     def _on_scale_up(self, _unused: int = 0) -> None:
-        self.co.add_worker()
-        self.workers.append(WorkerState())
+        self.co.add_worker(self.now)
+        ws = WorkerState()
+        self.workers.append(ws)
+        self._alive_list.append(True)
+        if np is not None:
+            self._loadnum = np.append(self._loadnum, 0)
+            self._alive_np = np.append(self._alive_np, True)
+        self._queue_views.append(_QueueView(ws))
         self.n_workers += 1
         self._readmit_orphans()
+
+    # -- straggler injection ---------------------------------------------------
+    def _on_slow(self, w: int) -> None:
+        """Plan event: worker ``w`` becomes a straggler (its service
+        rates divide by ``straggler_slowdown``).  Steps already in
+        flight keep their original finish times — slowdowns hit new
+        admissions, like a thermal throttle between batches."""
+        self._slow[w] = self.straggler_slowdown
+
+    def _on_heal(self, w: int) -> None:
+        self._slow.pop(w, None)
 
     def _readmit_orphans(self) -> None:
         orphans, self._orphans = self._orphans, []
@@ -690,6 +857,19 @@ class ClusterSim:
                 bad.append(f"worker {w} active={ws.active}")
             if abs(ws.active_kv) >= self._kv_tol:
                 bad.append(f"worker {w} active_kv={ws.active_kv}")
+            # incremental-index invariants: the O(1) mirrors must agree
+            # with ground truth at quiescence
+            if np is not None and \
+                    self._loadnum[w] != ws.active + len(ws.queue):
+                bad.append(f"worker {w} load index drifted: "
+                           f"{self._loadnum[w]} != "
+                           f"{ws.active + len(ws.queue)}")
+            if (w in self._nonempty) != bool(ws.queue):
+                bad.append(f"worker {w} nonempty index stale")
+            if self._alive_list[w] != ws.alive:
+                bad.append(f"worker {w} alive mirror stale")
+        if abs(self._active_kv_total) >= self._kv_tol * self.n_workers:
+            bad.append(f"active_kv_total={self._active_kv_total}")
         if bad:
             raise RuntimeError("conservation violated: " + "; ".join(bad))
 

@@ -172,16 +172,27 @@ def webarena_workload(n_tasks: int = 812, rate_per_min: float = 8.0,
 
 def scale_workload(n_workers: int, tasks_per_worker: float = 2.0,
                    seed: int = 0, horizon_s: float = 600.0,
-                   n_steps: int = 8) -> List[Task]:
+                   n_steps: int = 8, burst_frac: float = 0.0,
+                   burst_window_s: float = 30.0) -> List[Task]:
     """Cluster-scale driver for the schedulers' hot paths (the 256-worker
     ``benchmarks/scale_sweep.py``): short fixed-length swebench-style
     tasks at an aggregate arrival rate proportional to cluster size, so
     per-worker pressure — and therefore queue depth, the thing the heap
-    queues are meant to handle — stays constant as workers grow."""
+    queues are meant to handle — stays constant as workers grow.
+
+    ``burst_frac`` > 0 front-loads that fraction of the tasks uniformly
+    into the first ``burst_window_s`` seconds (adversarial arrival
+    spike: queues build cluster-wide, the regime straggler/preemption
+    chaos is meant to stress)."""
     rng = random.Random(seed + 3)
     n_tasks = int(n_workers * tasks_per_worker)
-    rate = n_tasks / (horizon_s / 60.0)
-    arr = poisson_arrivals(rate, horizon_s * 1.5, rng)[:n_tasks]
+    n_burst = int(n_tasks * burst_frac)
+    burst = sorted(rng.uniform(0.0, burst_window_s)
+                   for _ in range(n_burst))
+    rate = max(n_tasks - n_burst, 1) / (horizon_s / 60.0)
+    arr = burst + poisson_arrivals(rate, horizon_s * 1.5,
+                                   rng)[:n_tasks - n_burst]
+    arr.sort()
     return [make_task(f"scale-{i}", f"tenant{i % 8}", "burstgpt", t, rng,
                       n_steps=n_steps)
             for i, t in enumerate(arr)]

@@ -29,7 +29,10 @@ class SessionRouter:
             self.affinity_hits += 1
             return w_star
         self.affinity_misses += 1
-        w = min(range(len(loads)), key=lambda i: loads[i])
+        if hasattr(loads, "argmin"):        # numpy load vector: C argmin
+            w = int(loads.argmin())
+        else:
+            w = min(range(len(loads)), key=lambda i: loads[i])
         self.home[session_id] = w
         return w
 

@@ -12,25 +12,47 @@ Theorem 2 (Lyapunov drift): urgency-proportional allocation is a
 restoring force on the deviation e_i = S_i - mu_i * t; `lyapunov_v`
 exposes V(t) = sum e_i^2 so tests/benches can verify the negative-drift
 property empirically.
+
+Incremental accumulation (delta-update invariants)
+--------------------------------------------------
+``recompute(now)`` runs every epoch over every pending task, so the
+per-task (deadline, work, tenant-index) columns are *persistent*
+capacity-doubled arrays maintained by O(1) delta updates instead of
+being rebuilt on structural change:
+
+  * ``add_task``      appends one row (amortized O(1); arrays double).
+  * ``finish_task``   tombstones the row by zeroing its work column — a
+    zero contribution is exact (``x + 0.0 == x`` bitwise), so finished
+    rows never perturb the running bincount sums.
+  * ``note_progress`` marks the row dirty; ``recompute`` flushes dirty
+    rows (O(|dirty|)) before the vectorized slack math, coalescing any
+    number of progress updates between epochs into one column write.
+  * tombstones are compacted away once they outnumber live rows
+    (amortized O(1) per op, order-preserving so sums stay bit-exact).
+
+The slack/contribution reduction itself must touch every live row —
+Eq. 8's ``deadline - now`` term changes for every task every tick — but
+it stays a single vectorized ``bincount`` (C speed), and the Python-
+loop column rebuild the old cached-column path performed on every
+admission/finish is gone entirely.
+
+Invariant: ``recompute(now) == recompute_full(now)`` bit-for-bit at any
+interleaving of add/finish/progress events — ``recompute_full`` rebuilds
+fresh columns from the live task dict and runs the identical math, and
+``tests/test_faults.py::test_incremental_vs_full_afs_equivalence``
+property-checks the equality.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, NamedTuple, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set
 
 try:
     import numpy as np
 except ImportError:          # pragma: no cover - numpy ships with repo
     np = None
 
-
-class _TaskCols(NamedTuple):
-    """Cached per-task columns for the vectorized AFS recompute."""
-    deadlines: "np.ndarray"
-    works: "np.ndarray"          # mutated in place on finish/progress
-    tenant_idx: "np.ndarray"
-    names: List[str]             # tenant order at build time
-    row_of: Dict[str, int]       # task_id -> row in the columns
+_MIN_ROWS = 64               # initial column capacity / compaction floor
 
 
 @dataclass
@@ -58,74 +80,164 @@ class AFSScheduler:
         self.tenants: Dict[str, TenantState] = {}
         self.tasks: Dict[str, TaskProgress] = {}
         self.preemptions = 0
-        # recompute() runs every 100 ms over every pending task; the
-        # (deadline, work, tenant-index) columns change only on task
-        # add/finish/progress, so they are cached as arrays and the
-        # per-epoch work is vectorized (bit-identical accumulation
-        # order to the scalar loop).
-        self._cols = None
+        # persistent vectorized columns (see module docstring)
+        self._n = 0                       # used rows incl. tombstones
+        self._live = 0                    # rows backing a pending task
+        self._row_of: Dict[str, int] = {}
+        self._dirty: Set[str] = set()     # task ids with unflushed work
+        self._names: List[str] = []       # tenant order (first-seen)
+        self._tpos: Dict[str, int] = {}
+        if np is not None:
+            self._deadlines = np.zeros(_MIN_ROWS)
+            self._works = np.zeros(_MIN_ROWS)
+            self._tidx = np.zeros(_MIN_ROWS, dtype=np.intp)
 
-    def _invalidate(self) -> None:
-        self._cols = None
+    # -- column maintenance ------------------------------------------------
+    def _tenant_index(self, tenant: str) -> int:
+        pos = self._tpos.get(tenant)
+        if pos is None:
+            pos = len(self._names)
+            self._tpos[tenant] = pos
+            self._names.append(tenant)
+        return pos
+
+    def _grow(self) -> None:
+        cap = max(_MIN_ROWS, 2 * len(self._deadlines))
+        for name in ("_deadlines", "_works", "_tidx"):
+            old = getattr(self, name)
+            new = np.zeros(cap, dtype=old.dtype)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
+
+    def _compact(self) -> None:
+        """Drop tombstoned rows once they outnumber live ones.  Keeps
+        relative row order, so per-tenant bincount accumulation order —
+        and therefore every bit of the shares — is unchanged."""
+        keep = sorted(self._row_of.items(), key=lambda kv: kv[1])
+        n = len(keep)
+        for new_row, (tid, old_row) in enumerate(keep):
+            self._deadlines[new_row] = self._deadlines[old_row]
+            self._works[new_row] = self._works[old_row]
+            self._tidx[new_row] = self._tidx[old_row]
+            self._row_of[tid] = new_row
+        self._n = n
+        self._live = n
+
+    def _flush_dirty(self) -> None:
+        """Apply pending work-column deltas — O(|dirty|), the only rows
+        ``recompute`` writes."""
+        for tid in self._dirty:
+            row = self._row_of.get(tid)
+            if row is not None:
+                t = self.tasks.get(tid)
+                self._works[row] = t.work_remain_s if t is not None else 0.0
+        self._dirty.clear()
 
     # -- registration ----------------------------------------------------
     def add_task(self, tp: TaskProgress) -> None:
         self.tasks[tp.task_id] = tp
         self.tenants.setdefault(tp.tenant, TenantState(tp.tenant))
-        self._invalidate()
+        if np is None:
+            return
+        pos = self._tenant_index(tp.tenant)
+        if self._n >= len(self._deadlines):
+            self._grow()
+        row = self._n
+        self._n += 1
+        self._live += 1
+        self._deadlines[row] = tp.deadline
+        self._works[row] = tp.work_remain_s
+        self._tidx[row] = pos
+        self._row_of[tp.task_id] = row
 
     def finish_task(self, task_id: str) -> None:
-        if self.tasks.pop(task_id, None) is not None:
-            # zero the cached work column instead of rebuilding: a
-            # zero contribution is exact (x + 0.0 == x), and finishes
-            # are the highest-rate mutation
-            if self._cols is not None and task_id in self._cols.row_of:
-                self._cols.works[self._cols.row_of[task_id]] = 0.0
-            else:
-                self._invalidate()
+        if self.tasks.pop(task_id, None) is None:
+            return
+        self._dirty.discard(task_id)
+        if np is None:
+            return
+        row = self._row_of.pop(task_id, None)
+        if row is not None:
+            # tombstone: a zero contribution is exact (x + 0.0 == x)
+            self._works[row] = 0.0
+            self._live -= 1
+            if self._n > _MIN_ROWS and self._n > 2 * self._live:
+                self._compact()
 
     def note_service(self, tenant: str, gpu_seconds: float) -> None:
         if tenant not in self.tenants:
             self.tenants[tenant] = TenantState(tenant)
-            self._invalidate()
+            if np is not None:
+                self._tenant_index(tenant)
         self.tenants[tenant].service_s += gpu_seconds
 
     def note_progress(self, task_id: str, work_done_s: float) -> None:
         t = self.tasks.get(task_id)
         if t:
             t.work_remain_s = max(0.0, t.work_remain_s - work_done_s)
-            if self._cols is not None and task_id in self._cols.row_of:
-                self._cols.works[self._cols.row_of[task_id]] = \
-                    t.work_remain_s
-            else:
-                self._invalidate()
+            if np is not None:     # scalar fallback has no columns to sync
+                self._dirty.add(task_id)
 
     # -- Eq. 8 -------------------------------------------------------------
-    def recompute(self, now: float) -> Dict[str, float]:
-        # Epoch hot path (every 100 ms over every pending task).  At
-        # cluster scale the per-task Python loop dominated the whole
-        # simulator event loop, so the task columns are cached and the
-        # slack/contribution math runs vectorized; bincount accumulates
-        # per tenant in the same task order as the scalar loop, so the
-        # result is bit-identical.
+    def _accumulate(self, now: float) -> Dict[str, float]:
+        """Per-tenant AFS numerators in tenant first-seen order."""
         if np is not None and self.tasks:
-            if self._cols is None:
-                names = list(self.tenants)
-                tidx = {k: i for i, k in enumerate(names)}
-                self._cols = _TaskCols(
-                    np.array([t.deadline for t in self.tasks.values()]),
-                    np.array([t.work_remain_s
-                              for t in self.tasks.values()]),
-                    np.array([tidx[t.tenant]
-                              for t in self.tasks.values()]),
-                    names,
-                    {k: i for i, k in enumerate(self.tasks)},
-                )
-            c = self._cols
-            slack = np.maximum(c.deadlines - now, self.epoch_s)
-            acc_v = np.bincount(c.tenant_idx, weights=c.works / slack,
-                                minlength=len(c.names))
-            acc = dict(zip(c.names, acc_v.tolist()))
+            self._flush_dirty()
+            n = self._n
+            slack = np.maximum(self._deadlines[:n] - now, self.epoch_s)
+            acc_v = np.bincount(self._tidx[:n],
+                                weights=self._works[:n] / slack,
+                                minlength=len(self._names))
+            return dict(zip(self._names, acc_v.tolist()))
+        acc = dict.fromkeys(self.tenants, 0.0)
+        eps = self.epoch_s
+        for t in self.tasks.values():
+            slack = t.deadline - now
+            if slack < eps:
+                slack = eps
+            acc[t.tenant] += t.work_remain_s / slack
+        return acc
+
+    def _shares_from(self, acc: Dict[str, float],
+                     write: bool = True) -> Dict[str, float]:
+        total = 0.0
+        for v in acc.values():
+            if v > 0.0:
+                total += v
+        uniform = 1.0 / max(len(self.tenants), 1)
+        shares: Dict[str, float] = {}
+        for ten in self.tenants.values():
+            afs = acc.get(ten.tenant, 0.0)
+            share = (afs / total) if total > 0 else uniform
+            if write:
+                ten.afs = afs
+                ten.share = share
+            shares[ten.tenant] = share
+        return shares
+
+    def recompute(self, now: float) -> Dict[str, float]:
+        """Epoch hot path: flush O(|dirty|) column writes, then one
+        vectorized slack/bincount reduction (C speed) over the
+        persistent columns.  No Python-loop rebuilds, ever."""
+        return self._shares_from(self._accumulate(now), write=True)
+
+    def recompute_full(self, now: float) -> Dict[str, float]:
+        """Reference path: rebuild fresh columns from the live task dict
+        and run the identical math.  Pure (does not touch tenant or
+        column state) — the incremental path is regression-gated to
+        match this bit-for-bit."""
+        if np is not None and self.tasks:
+            names = list(self.tenants)
+            tpos = {k: i for i, k in enumerate(names)}
+            deadlines = np.array([t.deadline for t in self.tasks.values()])
+            works = np.array([t.work_remain_s
+                              for t in self.tasks.values()])
+            tidx = np.array([tpos[t.tenant] for t in self.tasks.values()],
+                            dtype=np.intp)
+            slack = np.maximum(deadlines - now, self.epoch_s)
+            acc_v = np.bincount(tidx, weights=works / slack,
+                                minlength=len(names))
+            acc = dict(zip(names, acc_v.tolist()))
         else:
             acc = dict.fromkeys(self.tenants, 0.0)
             eps = self.epoch_s
@@ -134,16 +246,7 @@ class AFSScheduler:
                 if slack < eps:
                     slack = eps
                 acc[t.tenant] += t.work_remain_s / slack
-        total = 0.0
-        for v in acc.values():
-            if v > 0.0:
-                total += v
-        uniform = 1.0 / max(len(self.tenants), 1)
-        for ten in self.tenants.values():
-            afs = acc[ten.tenant]
-            ten.afs = afs
-            ten.share = (afs / total) if total > 0 else uniform
-        return {k: v.share for k, v in self.tenants.items()}
+        return self._shares_from(acc, write=False)
 
     def priority(self, tenant: str) -> float:
         t = self.tenants.get(tenant)

@@ -17,7 +17,14 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass, field, asdict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+try:
+    import numpy as np
+except ImportError:          # pragma: no cover - numpy ships with repo
+    np = None
+
+INF = float("inf")
 
 from repro.core.aeg import AEG, PatternInferencer, ToolStats
 from repro.core.affinity import SessionRouter
@@ -99,10 +106,29 @@ class GlobalCoordinator:
         self.pools: List[WALRUCache] = [self._make_pool()
                                         for _ in range(n_workers)]
         self.alive = [True] * n_workers
+        self._n_dead = 0
+        if np is not None:
+            self._alive_np = np.ones(n_workers, dtype=bool)
+        # incremental aggregates: total cached bytes across pools and a
+        # session -> {workers whose pool holds its entry} index, so
+        # memory sampling and task teardown are O(sites touched), not
+        # O(n_workers)
+        self.pools_used = 0.0
+        self._sites: Dict[str, Set[int]] = {}
         # instrumentation
         self.cache_hits = 0
         self.cache_misses = 0
         self.regen_tokens = 0.0
+
+    def _site_add(self, session_id: str, worker: int) -> None:
+        self._sites.setdefault(session_id, set()).add(worker)
+
+    def _site_discard(self, session_id: str, worker: int) -> None:
+        s = self._sites.get(session_id)
+        if s is not None:
+            s.discard(worker)
+            if not s:
+                del self._sites[session_id]
 
     # ------------------------------------------------------------------
     def _make_pool(self) -> WALRUCache:
@@ -145,20 +171,32 @@ class GlobalCoordinator:
             self.inferencer.record_trace(info.tools_seen)
         self.afs.finish_task(session_id)
         self.router.forget(session_id)
-        for w in range(len(self.pools)):
-            # explicit unpin before removal: a hit entry pinned at the
-            # final step's start must not survive as an unevictable ghost
-            # if removal is ever made lazy
+        # only the workers whose pool actually holds the session (the
+        # sites index) — not a cluster-wide sweep.  Explicit unpin
+        # before removal: a hit entry pinned at the final step's start
+        # must not survive as an unevictable ghost if removal is ever
+        # made lazy.
+        for w in sorted(self._sites.pop(session_id, ())):
             self.unpin(session_id, w)
-            self.pools[w].remove(session_id)
+            e = self.pools[w].remove(session_id)
+            if e is not None:
+                self.pools_used -= e.size_bytes
 
     # -- routing (Eq. 7) ---------------------------------------------------
     def route(self, session_id: str, loads: Sequence[float],
               now: float) -> int:
-        loads = [l if self.alive[i] else float("inf")
-                 for i, l in enumerate(loads)]
-        if not self.cfg.enable_affinity:
-            return min(range(len(loads)), key=lambda i: loads[i])
+        if np is not None and isinstance(loads, np.ndarray):
+            # numpy fast path (the simulator's incremental load vector):
+            # dead-worker masking and argmin run in C
+            if self._n_dead:
+                loads = np.where(self._alive_np[:len(loads)], loads, INF)
+            if not self.cfg.enable_affinity:
+                return int(loads.argmin())
+        else:
+            loads = [l if self.alive[i] else INF
+                     for i, l in enumerate(loads)]
+            if not self.cfg.enable_affinity:
+                return min(range(len(loads)), key=lambda i: loads[i])
         return self.router.route(
             session_id, loads,
             cached=lambda w, s: self.pools[w].contains(s))
@@ -214,6 +252,8 @@ class GlobalCoordinator:
             if victim is None:
                 break
             pool.remove(victim.session_id)
+            self.pools_used -= victim.size_bytes
+            self._site_discard(victim.session_id, worker)
             pool.evictions += 1
             pool.bytes_evicted += victim.size_bytes
             n += 1
@@ -255,7 +295,15 @@ class GlobalCoordinator:
                            t_last=now, tokens=ctx_tokens,
                            node_id=info.node_id if info else 0,
                            ttl_deadline=deadline)
+        used_before = pool.used
         evicted = pool.insert(entry, now)
+        self.pools_used += pool.used - used_before
+        for ev in evicted:
+            self._site_discard(ev.session_id, worker)
+        if pool.contains(session_id):
+            self._site_add(session_id, worker)
+        else:            # replaced-but-didn't-fit: old entry is gone too
+            self._site_discard(session_id, worker)
         if info is not None and self.cfg.enable_prefetch:
             self.prefetcher.maybe_issue(session_id, info.aeg, info.node_id,
                                         entry_bytes, now,
@@ -268,24 +316,49 @@ class GlobalCoordinator:
         self.ttl.observe(tool, latency_s)
 
     # -- stealing / migration ------------------------------------------------
+    def on_worker_idle(self, worker: int, now: float) -> None:
+        """A worker's pending queue just went empty — enter the indexed
+        idle set with the *exact* transition time (the legacy per-epoch
+        scan quantized idle starts to epoch boundaries)."""
+        if self.cfg.enable_stealing and self.alive[worker]:
+            self.stealer.note_queue_state(worker, True, now)
+
+    def on_worker_busy(self, worker: int) -> None:
+        """A worker's pending queue just became non-empty — leave the
+        idle set (O(1))."""
+        if self.cfg.enable_stealing:
+            self.stealer.note_queue_state(worker, False, 0.0)
+
     def epoch_tick(self, now: float, loads: Sequence[float],
                    queues: Sequence[Sequence[Tuple[float, str]]],
-                   alive: Optional[Sequence[bool]] = None
+                   alive: Optional[Sequence[bool]] = None, *,
+                   victim_candidates: Optional[Sequence[int]] = None,
+                   scan_queues: bool = True
                    ) -> Tuple[Optional[StealDecision], Dict[str, float]]:
         """Per-epoch AFS share recompute + steal decision.  ``alive``
         defaults to the coordinator's own liveness view; dead workers
         are treated as not-idle (their empty queues must not accrue
-        steal credit) and are excluded from thief and victim roles."""
+        steal credit) and are excluded from thief and victim roles.
+
+        ``scan_queues=True`` (legacy) refreshes the stealer's idle set
+        by walking every worker queue.  Callers that report queue-depth
+        transitions through ``on_worker_idle``/``on_worker_busy`` (the
+        simulator) pass ``scan_queues=False`` plus their nonempty-queue
+        index as ``victim_candidates``, making the tick O(changes)
+        instead of O(n_workers)."""
         if alive is None:
             alive = self.alive
         shares = self.afs.recompute(now) if self.cfg.enable_afs else {}
         decision = None
         if self.cfg.enable_stealing:
-            for w in range(len(loads)):
-                up = w < len(alive) and alive[w]
-                self.stealer.note_queue_state(w, up and not queues[w], now)
-            decision = self.stealer.maybe_steal(now, loads, queues,
-                                                alive=alive)
+            if scan_queues:
+                for w in range(len(loads)):
+                    up = w < len(alive) and alive[w]
+                    self.stealer.note_queue_state(w, up and not queues[w],
+                                                  now)
+            decision = self.stealer.maybe_steal(
+                now, loads, queues, alive=alive,
+                candidates=victim_candidates)
         return decision, shares
 
     def migrate_session(self, session_id: str, src: int, dst: int,
@@ -295,8 +368,17 @@ class GlobalCoordinator:
         entry = self.pools[src].remove(session_id)
         if entry is None:
             return 0.0
+        self.pools_used -= entry.size_bytes
+        self._site_discard(session_id, src)
         entry.t_last = now
-        self.pools[dst].insert(entry, now)
+        dst_pool = self.pools[dst]
+        used_before = dst_pool.used
+        evicted = dst_pool.insert(entry, now)
+        self.pools_used += dst_pool.used - used_before
+        for ev in evicted:
+            self._site_discard(ev.session_id, dst)
+        if dst_pool.contains(session_id):
+            self._site_add(session_id, dst)
         self.router.set_home(session_id, dst)
         return entry.size_bytes
 
@@ -309,19 +391,41 @@ class GlobalCoordinator:
         simulator pairs this with cancelling the worker's in-flight
         steps and requeueing them on live workers.  Returns the session
         ids whose state was lost."""
+        if not self.alive[worker]:
+            return []
         self.alive[worker] = False
-        lost = list(self.pools[worker].entries)
+        self._n_dead += 1
+        if np is not None:
+            self._alive_np[worker] = False
+        pool = self.pools[worker]
+        lost = list(pool.entries)
+        self.pools_used -= pool.used
+        for sid in lost:
+            self._site_discard(sid, worker)
         self.pools[worker] = self._make_pool()
         dropped = self.router.evict_worker(worker)
+        # dead workers leave the indexed idle set: an empty queue on a
+        # corpse must not accrue steal credit
+        self.stealer.note_queue_state(worker, False, 0.0)
         return sorted(set(lost) | set(dropped))
 
-    def worker_recovered(self, worker: int) -> None:
+    def worker_recovered(self, worker: int, now: float = 0.0) -> None:
+        if self.alive[worker]:
+            return
         self.alive[worker] = True
+        self._n_dead -= 1
+        if np is not None:
+            self._alive_np[worker] = True
+        # a recovered worker comes back with an empty queue: idle now
+        self.on_worker_idle(worker, now)
 
-    def add_worker(self) -> int:
+    def add_worker(self, now: float = 0.0) -> int:
         self.pools.append(self._make_pool())
         self.alive.append(True)
+        if np is not None:
+            self._alive_np = np.append(self._alive_np, True)
         self.n_workers += 1
+        self.on_worker_idle(self.n_workers - 1, now)
         return self.n_workers - 1
 
     # -- checkpoint/restart ------------------------------------------------
@@ -358,3 +462,8 @@ class GlobalCoordinator:
                 self.inferencer.counts[a][c] = n
         self.inferencer.n_tasks = snap["inferencer_n"]
         self.alive = list(snap["alive"])
+        # resync the liveness mirrors the numpy route() fast path and
+        # the fail/recover transition counters depend on
+        self._n_dead = sum(1 for a in self.alive if not a)
+        if np is not None:
+            self._alive_np = np.array(self.alive, dtype=bool)

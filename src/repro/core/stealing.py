@@ -42,6 +42,11 @@ class WorkStealer:
         self.rejected_stale = 0
 
     def note_queue_state(self, worker: int, empty: bool, now: float) -> None:
+        """Transition hook: ``idle_since`` *is* the indexed idle-worker
+        set — a dict keyed by worker id holding the time its queue went
+        empty.  O(1) membership add/remove; callers invoke it on
+        queue-depth transitions (and the legacy per-epoch scan path
+        refreshes it wholesale, which is idempotent)."""
         if empty:
             self.idle_since.setdefault(worker, now)
         else:
@@ -53,7 +58,8 @@ class WorkStealer:
 
     def maybe_steal(self, now: float, loads: Sequence[float],
                     queues: Sequence[Sequence[Tuple[float, str]]],
-                    alive: Optional[Sequence[bool]] = None
+                    alive: Optional[Sequence[bool]] = None,
+                    candidates: Optional[Sequence[int]] = None
                     ) -> Optional[StealDecision]:
         """queues[w] = [(enqueue_time, session_id), ...] oldest-first.
 
@@ -62,17 +68,28 @@ class WorkStealer:
         instant.  ``alive`` masks dead workers out of both roles: a
         dead worker has an empty queue and so accrues idle time, but
         stealing onto it would strand the session forever.
+
+        Thieves come from the indexed idle set (``idle_since``), not a
+        cluster-wide scan; ``candidates`` optionally restricts the
+        victim scan to workers known to have pending work (the
+        simulator passes its nonempty-queue index), making the whole
+        call O(idle + nonempty) instead of O(n_workers).
         """
         n = len(loads)
+        if candidates is not None and not candidates:
+            return None        # no queue anywhere: nothing to steal
 
         def _ok(w: int) -> bool:
             return alive is None or (w < len(alive) and alive[w])
 
-        idle = [w for w in range(n) if _ok(w) and self._idle_ok(w, now)]
+        idle = sorted(w for w, t0 in self.idle_since.items()
+                      if w < n and _ok(w) and (now - t0) >= self.t_idle)
         if not idle:
             return None
-        lo = max(min(loads), 1e-6)
-        overloaded = [w for w in range(n)
+        lo_load = loads.min() if hasattr(loads, "min") else min(loads)
+        lo = max(float(lo_load), 1e-6)
+        cand = sorted(candidates) if candidates is not None else range(n)
+        overloaded = [w for w in cand
                       if _ok(w) and loads[w] / lo >= self.r_max
                       and queues[w]]
         if not overloaded:
@@ -84,7 +101,10 @@ class WorkStealer:
             if now - self.last_migrated.get(sid, -1e18) >= self.cooldown:
                 self.steals += 1
                 self.last_migrated[sid] = now
-                self.idle_since.pop(thief, None)
+                # restart (don't evict) the thief's idle clock: its
+                # queue is still empty, so under transition-driven
+                # updates nothing would ever re-add it
+                self.idle_since[thief] = now
                 return StealDecision(thief, victim, sid)
         return None
 

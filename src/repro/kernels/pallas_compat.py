@@ -1,0 +1,23 @@
+"""Version-tolerant accessors over Pallas TPU API drift.
+
+``jax.experimental.pallas.tpu`` renamed its compiler-params container
+across releases: older releases expose ``TPUCompilerParams``, newer ones
+``CompilerParams`` (and the oldest accept a plain ``dict``).  Every
+kernel in this package routes through :func:`tpu_compiler_params` so the
+same source runs on whichever jax the environment bakes in.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under whichever name this
+    jax release exports.  Falls back to a plain dict (the pre-dataclass
+    API) and finally to ``None`` (interpret mode ignores the hints)."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:                      # pragma: no cover - ancient jax
+        return dict(mosaic=dict(kwargs))
+    return cls(**kwargs)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
                  chunk: int, dh: int):
@@ -63,7 +65,7 @@ def wkv6_bht(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
         out_specs=pl.BlockSpec((1, c, dh), lambda b, j: (b, j, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, T, dh), jnp.float32),
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -22,13 +22,29 @@ F32 = jnp.float32
 NEG_INF = -1e30
 
 
+def pin_bf16(x):
+    """Force a bf16 tensor's storage rounding to actually happen.
+
+    XLA's excess-precision pass may elide an f32->bf16->f32 convert pair
+    inside a fused graph, so the *same* bf16-typed intermediate holds
+    different values in differently-fused programs (e.g. the S-token
+    prefill graph vs the 1-token decode graph).  Any knife-edge discrete
+    decision downstream — the MoE router's top_k above all — then
+    diverges between serving paths.  ``lax.reduce_precision`` performs
+    the rounding explicitly and is never elided, making residual-stream
+    values bit-identical across fusion choices."""
+    if x.dtype == jnp.bfloat16:
+        return lax.reduce_precision(x, exponent_bits=8, mantissa_bits=7)
+    return x
+
+
 # ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
 def rms_norm(x, scale, eps: float = 1e-5):
     var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
     out = x.astype(F32) * jax.lax.rsqrt(var + eps)
-    return (out * scale.astype(F32)).astype(x.dtype)
+    return pin_bf16((out * scale.astype(F32)).astype(x.dtype))
 
 
 def group_norm_heads(x, scale, n_heads: int, eps: float = 1e-5):

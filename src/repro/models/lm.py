@@ -363,7 +363,10 @@ def layer_scan(body, carry, xs, env: ShardingEnv):
 
 
 def _res_cs(x, env, sp: bool):
-    return env.cs(x, env.batch_axes, "model" if sp else None, None)
+    # pin the residual stream's bf16 rounding so the prefill/full and
+    # decode graphs see bit-identical layer inputs (see L.pin_bf16)
+    return env.cs(L.pin_bf16(x), env.batch_axes,
+                  "model" if sp else None, None)
 
 
 def _maybe_remat(fn, env):
@@ -422,14 +425,17 @@ def _uniform_decode_block(x, lp, kc, vc, cfg, env, pos):
         y, kc, vc = L.mla_attention_decode(h, lp["attn"], cfg, env, kc, vc, pos)
     else:
         y, kc, vc = L.gqa_attention_decode(h, lp["attn"], cfg, env, kc, vc, pos)
-    x = x + y
+    # pin the sublayer output AND the residual add, mirroring
+    # _uniform_block's _res_cs(y) / _res_cs(x + y) pair exactly, so
+    # decode and prefill round the stream identically (L.pin_bf16)
+    x = L.pin_bf16(x + L.pin_bf16(y))
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
     if "router" in lp["mlp"]:
         y = L.moe_block(h, lp["mlp"], cfg, env,
                         impl=env.opts.get("moe_impl", "ep"))
     else:
         y = L.ffn_swiglu(h, lp["mlp"], env)
-    return x + y, kc, vc
+    return L.pin_bf16(x + L.pin_bf16(y)), kc, vc
 
 
 # --- jamba superblocks -----------------------------------------------------

@@ -10,11 +10,13 @@ import pytest
 
 import repro.cluster
 from repro.cluster import baselines as B
-from repro.cluster.faults import chaos_plan
+from repro.cluster.faults import chaos_plan, preemption_storm_plan, \
+    straggler_plan
 from repro.cluster.perf import PerfModel
 from repro.cluster.simulator import ClusterSim, _fnv1a, summarize
 from repro.cluster.workload import Step, Task, make_task, \
-    swebench_workload
+    scale_workload, swebench_workload
+from repro.core.afs import AFSScheduler, TaskProgress
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.core.stealing import WorkStealer
 
@@ -45,6 +47,134 @@ def test_chaos_conservation(mode):
     sim.run(horizon_s=86400)
     sim.check_conservation()
     assert summarize(sim)["n_tasks"] == len(tasks)
+
+
+@pytest.mark.parametrize("mode", ["session", "least", "group", "sticky"])
+def test_straggler_conservation(mode):
+    """Transient stragglers (slow/heal plan events) slow service but
+    must not break the lifecycle: every task finishes exactly once and
+    all accounting returns to zero."""
+    tasks = swebench_workload(n_tasks=30, rate_per_min=10.0, seed=4)
+    horizon = max(t.arrival_s for t in tasks) + 60.0
+    plan = straggler_plan(8, horizon_s=horizon, n_stragglers=3,
+                          slow_for_s=90.0, seed=7)
+    assert any(k == "slow" for _, k, _ in plan)
+    pol = B.saga()
+    pol.routing = mode
+    sim = ClusterSim(tasks, pol, n_workers=8, seed=0, fault_plan=plan)
+    sim.run(horizon_s=86400)
+    sim.check_conservation()
+    assert summarize(sim)["n_tasks"] == len(tasks)
+
+
+@pytest.mark.parametrize("mode", ["session", "least", "group", "sticky"])
+def test_preemption_storm_conservation(mode):
+    """Mass simultaneous worker kills (spot reclamation): the displaced
+    in-flight and queued steps all land on survivors and every task
+    still finishes exactly once."""
+    tasks = scale_workload(8, tasks_per_worker=4.0, seed=6,
+                           horizon_s=300.0, burst_frac=0.5)
+    plan = preemption_storm_plan(8, horizon_s=300.0, n_storms=2,
+                                 kill_frac=0.5, downtime_s=45.0, seed=9)
+    fails_by_t = {}
+    for t, k, _ in plan:
+        if k == "fail":
+            fails_by_t[t] = fails_by_t.get(t, 0) + 1
+    assert fails_by_t and max(fails_by_t.values()) >= 2, \
+        "storm must kill several workers at the same instant"
+    pol = B.saga()
+    pol.routing = mode
+    sim = ClusterSim(tasks, pol, n_workers=8, seed=0, fault_plan=plan)
+    sim.run(horizon_s=86400)
+    sim.check_conservation()
+    assert summarize(sim)["n_tasks"] == len(tasks)
+
+
+def test_straggler_actually_slows_service():
+    """A permanently slow worker must stretch its steps' service time
+    (the injection is real, not a no-op)."""
+    from repro.cluster.faults import StragglerInjector
+    tasks = _tiny_tasks(n=2, steps=2)
+    base = ClusterSim(tasks, B.saga(), n_workers=1, seed=0)
+    base.run(horizon_s=86400)
+    slow = ClusterSim(tasks, B.saga(), n_workers=1, seed=0,
+                      straggler=StragglerInjector({0: 4.0}))
+    slow.run(horizon_s=86400)
+    slow.check_conservation()
+    assert summarize(slow)["tct_mean"] > summarize(base)["tct_mean"]
+
+
+# --- incremental AFS ---------------------------------------------------------
+def test_incremental_vs_full_afs_equivalence():
+    """Property test: after any interleaving of add/progress/finish
+    events, the incremental column path returns bit-identical shares to
+    a fresh full rebuild (``recompute_full``)."""
+    import random as _random
+    for seed in range(5):
+        rng = _random.Random(seed)
+        afs = AFSScheduler()
+        live = []
+        next_id = 0
+        now = 0.0
+        for step in range(400):
+            now += rng.uniform(0.0, 0.3)
+            r = rng.random()
+            if r < 0.45 or not live:
+                tid = f"t{next_id}"
+                next_id += 1
+                afs.add_task(TaskProgress(
+                    tid, f"ten{rng.randrange(6)}",
+                    deadline=now + rng.uniform(0.05, 50.0),
+                    work_remain_s=rng.uniform(0.0, 20.0)))
+                live.append(tid)
+            elif r < 0.75:
+                afs.note_progress(rng.choice(live),
+                                  rng.uniform(0.0, 5.0))
+            else:
+                afs.finish_task(live.pop(rng.randrange(len(live))))
+            if step % 7 == 0:
+                reference = afs.recompute_full(now)
+                incremental = afs.recompute(now)
+                assert incremental == reference, (seed, step)
+        # drain everything: zero-task recompute stays consistent too
+        for tid in live:
+            afs.finish_task(tid)
+        assert afs.recompute(now + 1.0) == afs.recompute_full(now + 1.0)
+
+
+def test_afs_compaction_preserves_shares():
+    """Mass finishes trigger tombstone compaction; shares must stay
+    bit-identical to the full rebuild through it."""
+    afs = AFSScheduler()
+    for i in range(300):
+        afs.add_task(TaskProgress(f"t{i}", f"ten{i % 4}",
+                                  deadline=100.0 + i, work_remain_s=1.0 + i))
+    for i in range(280):                  # force compaction
+        afs.finish_task(f"t{i}")
+    assert afs._n < 300, "compaction never ran"
+    assert afs.recompute(3.0) == afs.recompute_full(3.0)
+
+
+# --- indexed idle-worker set -------------------------------------------------
+def test_idle_set_matches_queue_state_mid_run():
+    """At every pause point, the stealer's indexed idle set holds
+    exactly the live workers with empty pending queues, and the
+    nonempty-queue index is its complement."""
+    tasks = swebench_workload(n_tasks=24, rate_per_min=30.0, seed=8)
+    plan = chaos_plan(6, horizon_s=300.0, n_events=10, seed=2)
+    perf = PerfModel(max_batch=2)         # force queueing
+    sim = ClusterSim(tasks, B.saga(), n_workers=6, perf=perf, seed=0,
+                     fault_plan=plan)
+    for h in (5.0, 30.0, 90.0, 200.0, 86400.0):
+        sim.run(horizon_s=h)
+        idle = set(sim.co.stealer.idle_since)
+        expect_idle = {w for w, ws in enumerate(sim.workers)
+                       if ws.alive and not ws.queue}
+        assert idle == expect_idle, (h, idle, expect_idle)
+        expect_nonempty = {w for w, ws in enumerate(sim.workers)
+                           if ws.queue}
+        assert sim._nonempty == expect_nonempty, h
+    sim.check_conservation()
 
 
 def test_fail_cancels_inflight_steps():
@@ -145,7 +275,7 @@ def test_migration_to_dead_worker_requeues_live():
     sid = job.task.task_id
     dst = 1 - src
     # emulate an accepted steal whose destination dies mid-transfer
-    assert sim.workers[src].queue.remove(sid) is not None
+    assert sim._queue_remove(src, sid) is not None
     sim.migrating[sid] = dst
     sim._on_fail(dst)
     sim._on_migr_done(sid, job.step_idx, src, dst)
@@ -168,7 +298,7 @@ def test_migrated_job_lands_with_real_afs_priority():
     job = sim.workers[src].queue.peek()
     sid, tenant = job.task.task_id, job.task.tenant
     dst = 1 - src
-    assert sim.workers[src].queue.remove(sid) is not None
+    assert sim._queue_remove(src, sid) is not None
     sim.migrating[sid] = dst
     sim._on_migr_done(sid, job.step_idx, src, dst)
     expect = -sim.co.afs.priority(tenant)
