@@ -1,0 +1,220 @@
+"""Serving-runtime benchmark: SAGA vs request-level on REAL inference.
+
+Drives the event-driven concurrent runtime (``repro.serving.runtime``)
+with a trace-driven agent mix (SWE-bench / WebArena / BurstGPT-style
+structures from ``cluster.workload.runtime_requests``) over multiple
+real engines — actual jitted forward passes on the micro model, CPU —
+and compares workflow-atomic SAGA against the request-level baseline
+(vLLM-v0.6.0-style: KV discarded between steps):
+
+  * task-completion time (virtual clock: queueing + prefill + decode +
+    tool gaps),
+  * regenerated prefill tokens (the paper's central quantity, measured
+    from the engines' own counters, not simulated),
+  * conservation (every session finishes; no leaked slots or blocks).
+
+The request-level pass REUSES the SAGA pass's engines (their jit caches
+are warm and their pools were conservation-checked empty), so the A/B
+costs one compile set; its regeneration is the engine-counter delta.
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py           # full
+    PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke   # CI gate
+
+The smoke gate additionally asserts byte-identical SAGA summaries for
+two identical-seed runs in-process AND across processes with different
+PYTHONHASHSEED (the runtime's determinism contract).
+
+CSV rows follow the house format: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+
+from repro.cluster.workload import runtime_requests
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.models import lm
+from repro.serving.runtime import RuntimePerf, ServingRuntime
+
+from benchmarks.common import emit, save_json
+
+N_WORKERS = 2
+N_SLOTS = 6
+MAX_LEN = 256
+POOL_BLOCKS = 144
+SEED = 0
+# runtime_requests scales token counts down 64x to fit the micro model;
+# the virtual prefill rate scales with them (8000 tok/s at 70B / 64) so
+# regeneration costs the same *fraction* of virtual time as at scale.
+# Decode needs no rescale: one round is one token per session either way.
+PERF = RuntimePerf(prefill_tokens_per_s=8000.0 / 64.0)
+
+ENGINE_KEYS = ("prefill_tokens", "regen_tokens", "decode_steps")
+
+
+def request_level() -> SAGAConfig:
+    return SAGAConfig(cache_policy="none", enable_affinity=False,
+                      enable_ttl=False, enable_prefetch=False,
+                      enable_afs=False, enable_stealing=False,
+                      observability="none")
+
+
+def _sessions(smoke: bool):
+    cfg = get_config("micro")
+    n_steps = 3 if smoke else 5
+    return runtime_requests(n_sessions=16, vocab=cfg.vocab, seed=SEED,
+                            n_steps=n_steps, max_ctx=MAX_LEN - 32)
+
+
+def run_policy(cfg, params, saga, reqs, engines=None):
+    """One runtime pass; returns (runtime, engine-counter deltas)."""
+    rt = ServingRuntime(cfg, params, n_workers=N_WORKERS, saga=saga,
+                        n_slots=N_SLOTS, max_len=MAX_LEN,
+                        pool_blocks=POOL_BLOCKS, seed=SEED, perf=PERF,
+                        engines=engines)
+    before = {k: rt.stats()[k] for k in ENGINE_KEYS}
+    for r in reqs:
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    after = rt.stats()
+    delta = {k: after[k] - before[k] for k in ENGINE_KEYS}
+    return rt, delta
+
+
+def run_ab(smoke: bool) -> dict:
+    load_all()
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _sessions(smoke)
+
+    t0 = time.time()
+    saga_rt, saga_eng = run_policy(cfg, params, SAGAConfig(), reqs)
+    saga_wall = time.time() - t0
+    saga = saga_rt.summarize()
+
+    t0 = time.time()
+    base_rt, base_eng = run_policy(cfg, params, request_level(), reqs,
+                                   engines=saga_rt.engines)
+    base_wall = time.time() - t0
+    base_done = [s for s in base_rt.sessions.values()
+                 if s.finished_at >= 0]
+    base_tcts = sorted(s.tct for s in base_done)
+
+    if not saga["regen_tokens"] < base_eng["regen_tokens"]:
+        raise AssertionError(
+            f"SAGA regen {saga['regen_tokens']} not strictly below "
+            f"request-level {base_eng['regen_tokens']}")
+    if base_rt.co.cache_hits != 0:
+        raise AssertionError("request-level baseline hit cache")
+
+    out = {
+        "n_sessions": len(reqs),
+        "n_engines": N_WORKERS,
+        "saga": saga,
+        "saga_wall_s": saga_wall,
+        "reqlevel": {
+            "regen_tokens": base_eng["regen_tokens"],
+            "prefill_tokens": base_eng["prefill_tokens"],
+            "decode_rounds": base_eng["decode_steps"],
+            "tct_mean": sum(base_tcts) / len(base_tcts),
+            "tct_p99": base_tcts[min(len(base_tcts) - 1,
+                                     int(0.99 * len(base_tcts)))],
+            "makespan": max(s.finished_at for s in base_done),
+        },
+        "reqlevel_wall_s": base_wall,
+        "regen_reduction_x":
+            base_eng["regen_tokens"] / max(saga["regen_tokens"], 1),
+        "tct_speedup_x":
+            (sum(base_tcts) / len(base_tcts)) / max(saga["tct_mean"],
+                                                    1e-9),
+    }
+    emit("serve_saga", saga_wall,
+         f"regen={saga['regen_tokens']} tct_mean={saga['tct_mean']:.3f} "
+         f"hits={saga['cache_hits']} steals={saga['steals']}")
+    emit("serve_reqlevel", base_wall,
+         f"regen={base_eng['regen_tokens']} "
+         f"tct_mean={out['reqlevel']['tct_mean']:.3f}")
+    emit("serve_ab", saga_wall + base_wall,
+         f"regen_reduction={out['regen_reduction_x']:.2f}x "
+         f"tct_speedup={out['tct_speedup_x']:.2f}x")
+    return out
+
+
+def _fingerprint() -> str:
+    """Deterministic SAGA-run summary (fresh engines, fixed seed): the
+    byte-identity contract compared across runs and processes.  Reduced
+    size (8 sessions, 2 steps) so the smoke gate can afford to run it
+    three times — the contract is about replay, not scale."""
+    load_all()
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = runtime_requests(n_sessions=8, vocab=cfg.vocab, seed=SEED,
+                            n_steps=2, max_ctx=MAX_LEN - 32)
+    rt, _ = run_policy(cfg, params, SAGAConfig(), reqs)
+    return repr(rt.summarize())
+
+
+def smoke() -> None:
+    """CI gate: 16 concurrent sessions over 2 engines on real forward
+    passes — SAGA strictly below request-level regeneration,
+    conservation clean, and byte-identical identical-seed summaries
+    in-process and across PYTHONHASHSEED."""
+    out = run_ab(smoke=True)
+    a = _fingerprint()
+    assert a == _fingerprint(), "same-process summaries diverged"
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        r = subprocess.run([sys.executable, __file__, "--smoke-emit"],
+                           env=env, capture_output=True, text=True,
+                           timeout=240)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1], "cross-process summaries diverged"
+    assert a + "\n" == outs[0], "parent/child summaries diverged"
+    print(f"smoke ok: {out['n_sessions']} sessions / {out['n_engines']} "
+          f"engines, regen {out['saga']['regen_tokens']} vs "
+          f"{out['reqlevel']['regen_tokens']} "
+          f"({out['regen_reduction_x']:.2f}x), determinism green")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: A/B + conservation + determinism")
+    ap.add_argument("--smoke-emit", action="store_true",
+                    help="internal: print the determinism fingerprint")
+    args = ap.parse_args()
+    if args.smoke_emit:
+        print(_fingerprint())
+        return
+    if args.smoke:
+        smoke()
+        return
+    out = run_ab(smoke=False)
+    save_json("serve_bench", out)
+    print(f"SAGA:          regen={out['saga']['regen_tokens']:6d} tokens  "
+          f"tct_mean={out['saga']['tct_mean']:.3f}s  "
+          f"makespan={out['saga']['makespan']:.3f}s")
+    print(f"request-level: regen={out['reqlevel']['regen_tokens']:6d} "
+          f"tokens  tct_mean={out['reqlevel']['tct_mean']:.3f}s  "
+          f"makespan={out['reqlevel']['makespan']:.3f}s")
+    print(f"regen reduction {out['regen_reduction_x']:.2f}x, "
+          f"TCT speedup {out['tct_speedup_x']:.2f}x on real forward "
+          f"passes")
+
+
+if __name__ == "__main__":
+    main()

@@ -198,6 +198,60 @@ def scale_workload(n_workers: int, tasks_per_worker: float = 2.0,
             for i, t in enumerate(arr)]
 
 
+def runtime_requests(n_sessions: int = 16, vocab: int = 512,
+                     seed: int = 0,
+                     mix: Sequence[str] = ("swebench", "webarena",
+                                           "burstgpt"),
+                     n_steps: int = 4, max_ctx: int = 224,
+                     arrival_window_s: float = 2.0,
+                     token_scale: float = 1.0 / 64.0,
+                     max_gap_s: float = 20.0) -> List:
+    """Trace-driven agent mixes emitted as SERVING-RUNTIME requests.
+
+    Draws SWE-bench / WebArena / BurstGPT-style task structures from
+    ``make_task`` (step counts, tool sequences, Table-1 tool latencies)
+    and scales the token economics down by ``token_scale`` so the steps
+    run as REAL forward passes on the micro model: each step's prompt
+    (previous tool observation + new turn) becomes actual token ids,
+    contexts are capped at ``max_ctx`` so every session fits a slot.
+    Deterministic for a given seed across processes (one seeded
+    ``random.Random``, no builtin ``hash``)."""
+    # lazy: repro.serving pulls jax, which simulator-only users of this
+    # module never need
+    from repro.serving.runtime import AgentRequest
+
+    if max_ctx < 16:
+        raise ValueError(f"max_ctx={max_ctx} too small for 2-step tasks")
+    rng = random.Random(seed + 11)
+    reqs: List = []
+    for i in range(n_sessions):
+        kind = mix[i % len(mix)]
+        task = make_task(f"rt-{kind[:3]}-{i}", f"tenant{i % 4}", kind,
+                         rng.uniform(0.0, arrival_window_s), rng,
+                         n_steps=n_steps)
+        steps: List = []
+        ctx = 0
+        prev_obs = 0.0
+        for s in task.steps:
+            n_prompt = max(2, int((s.new_prompt_tokens + prev_obs)
+                                  * token_scale))
+            n_out = max(1, min(8, int(s.out_tokens * token_scale)))
+            if ctx + n_prompt + n_out > max_ctx:
+                break
+            prompt = [rng.randrange(1, vocab) for _ in range(n_prompt)]
+            steps.append((prompt, n_out, s.tool,
+                          min(s.tool_latency_s, max_gap_s)))
+            ctx += n_prompt + n_out
+            prev_obs = s.obs_tokens
+        if len(steps) < 2:         # degenerate draw (huge first prompt):
+            # replace with a minimal 2-step task that respects max_ctx
+            steps = [([rng.randrange(1, vocab) for _ in range(4)],
+                      2, "file_operations", 0.1) for _ in range(2)]
+        reqs.append(AgentRequest(task.task_id, task.tenant, steps,
+                                 arrival_s=task.arrival_s))
+    return reqs
+
+
 def burstgpt_workload(horizon_s: float = 1800.0, seed: int = 0,
                       load_factor: float = 0.5) -> List[Task]:
     """10 tenants: 3 heavy (100-step), 4 medium (30-step), 3 light

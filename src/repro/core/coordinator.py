@@ -120,6 +120,12 @@ class GlobalCoordinator:
         self.cache_misses = 0
         self.regen_tokens = 0.0
 
+    def cached_sites(self, session_id: str) -> Tuple[int, ...]:
+        """Workers whose pool currently holds an entry for the session
+        (home + prefetch replicas), sorted.  The serving runtime frees
+        the matching real KV blocks when a task finishes."""
+        return tuple(sorted(self._sites.get(session_id, ())))
+
     def _site_add(self, session_id: str, worker: int) -> None:
         self._sites.setdefault(session_id, set()).add(worker)
 
@@ -171,6 +177,9 @@ class GlobalCoordinator:
             self.inferencer.record_trace(info.tools_seen)
         self.afs.finish_task(session_id)
         self.router.forget(session_id)
+        # a prefetch issued during the final tool gap can never resolve:
+        # account its copy as waste instead of leaking the job
+        self.prefetcher.cancel(session_id)
         # only the workers whose pool actually holds the session (the
         # sites index) — not a cluster-wide sweep.  Explicit unpin
         # before removal: a hit entry pinned at the final step's start
@@ -258,6 +267,47 @@ class GlobalCoordinator:
             pool.bytes_evicted += victim.size_bytes
             n += 1
         return n
+
+    def drop_entry(self, session_id: str, worker: int,
+                   count_eviction: bool = True) -> Optional[CacheEntry]:
+        """Remove one pool entry and keep every aggregate (bytes total,
+        sites index, eviction counters) in sync.  The serving runtime's
+        event-driven WA-LRU reconciliation uses this instead of the old
+        per-step scan over every cached session."""
+        pool = self.pools[worker]
+        e = pool.remove(session_id)
+        if e is None:
+            return None
+        self.pools_used -= e.size_bytes
+        self._site_discard(session_id, worker)
+        if count_eviction:
+            pool.evictions += 1
+            pool.bytes_evicted += e.size_bytes
+        return e
+
+    def replicate_entry(self, session_id: str, src: int, dst: int,
+                        now: float) -> Tuple[bool, List[CacheEntry]]:
+        """Speculative prefetch landing (§4.3): clone ``src``'s pool
+        entry into ``dst`` — the source keeps its copy, unlike
+        ``migrate_session``.  Returns (inserted, evicted_at_dst) so the
+        caller can mirror the real KV blocks (copy on success, evict the
+        victims' blocks either way)."""
+        e = self.pools[src].entries.get(session_id)
+        if e is None or self.pools[dst].contains(session_id):
+            return False, []
+        clone = CacheEntry(session_id=session_id, size_bytes=e.size_bytes,
+                           t_last=now, tokens=e.tokens, node_id=e.node_id,
+                           ttl_deadline=e.ttl_deadline)
+        dst_pool = self.pools[dst]
+        used_before = dst_pool.used
+        evicted = dst_pool.insert(clone, now)
+        self.pools_used += dst_pool.used - used_before
+        for ev in evicted:
+            self._site_discard(ev.session_id, dst)
+        if dst_pool.contains(session_id):
+            self._site_add(session_id, dst)
+            return True, evicted
+        return False, evicted
 
     def unpin(self, session_id: str, worker: int) -> None:
         """Release the decode-time pin taken by ``on_step_start`` on a
@@ -362,12 +412,14 @@ class GlobalCoordinator:
         return decision, shares
 
     def migrate_session(self, session_id: str, src: int, dst: int,
-                        now: float) -> float:
+                        now: float) -> Tuple[float, List[CacheEntry]]:
         """Move a session's cache entry (Llumnix-style).  TTL state moves
-        with it (§3.1).  Returns bytes migrated."""
+        with it (§3.1).  Returns (bytes migrated, entries evicted at the
+        destination) — the serving runtime frees the victims' real KV
+        blocks from the evicted list."""
         entry = self.pools[src].remove(session_id)
         if entry is None:
-            return 0.0
+            return 0.0, []
         self.pools_used -= entry.size_bytes
         self._site_discard(session_id, src)
         entry.t_last = now
@@ -380,7 +432,7 @@ class GlobalCoordinator:
         if dst_pool.contains(session_id):
             self._site_add(session_id, dst)
         self.router.set_home(session_id, dst)
-        return entry.size_bytes
+        return entry.size_bytes, evicted
 
     # -- fault tolerance -------------------------------------------------
     def worker_failed(self, worker: int) -> List[str]:

@@ -44,12 +44,25 @@ class SpeculativePrefetcher:
         succ = aeg.most_likely_successor(node_id)
         if succ is None:
             return None
+        # an in-flight job for the same session is superseded, never
+        # resolved: its bytes were copied for nothing and must count as
+        # waste (previously they silently vanished from the accounting)
+        prev = self.inflight.get(session_id)
+        if prev is not None:
+            self.wasted_bytes += prev.bytes_
         job = PrefetchJob(session_id=session_id, node_id=succ,
                           bytes_=entry_bytes, issued_at=now,
                           ready_at=now + entry_bytes / self.bw)
         self.inflight[session_id] = job
         self.issued += 1
         return job
+
+    def cancel(self, session_id: str) -> None:
+        """Drop an in-flight job whose session ended before its next
+        step arrived (task finished mid-gap).  The copy was pure waste."""
+        job = self.inflight.pop(session_id, None)
+        if job is not None:
+            self.wasted_bytes += job.bytes_
 
     def resolve(self, session_id: str, actual_node: int,
                 now: float) -> bool:

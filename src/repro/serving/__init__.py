@@ -1,2 +1,26 @@
-"""Real-JAX serving engine: paged KV pool, continuous batching, sessions,
-multi-worker server under the SAGA coordinator."""
+"""Real-JAX serving layer: paged KV pool, engines, and the event-driven
+concurrent runtime under the SAGA coordinator.
+
+Architecture map (module -> paper section):
+
+  * ``kvcache.PagedKVPool`` — PagedAttention-style block pool; WA-LRU /
+    TTL decisions (§4.1-§4.2) mutate only block tables, never device
+    memory.
+  * ``engine.Engine`` — one worker: jitted prefill + continuous-batching
+    decode slots, park/resume of idle session KV into the pool
+    (delta-only prefill on resume), KV export/import for pool-to-pool
+    migration.  Admission is non-asserting: a full engine returns
+    ``None`` and the runtime queues.
+  * ``events`` — deterministic virtual-time event heap + AFS-ordered
+    ``SessionQueue`` (§6 admission); the byte-identical replay
+    substrate.
+  * ``runtime.ServingRuntime`` — the serving twin of the discrete-event
+    simulator, on real forward passes: workflow-atomic interleaving of
+    concurrent agent sessions (§3.1), AEG-guided reuse via the shared
+    ``GlobalCoordinator`` (§3.2-§3.3), Eq. 7 affinity routing +
+    work stealing with real KV block migration (§5), speculative
+    prefetch as real pool-to-pool copies overlapping tool gaps (§4.3),
+    and the 100 ms incremental AFS epoch tick (§6).
+  * ``server.MultiWorkerServer`` — legacy blocking facade: a thin
+    serial wrapper over the runtime.
+"""

@@ -23,6 +23,43 @@ from repro.models.sharding import ShardingEnv
 from repro.serving.kvcache import PagedKVPool
 
 
+# jitted prefill specializes on sequence length: bucket lengths so a
+# trace-driven workload compiles O(max_len / bucket) programs, not one
+# per distinct prompt length
+_PREFILL_BUCKET = 32
+
+# one jitted (decode, prefill) pair per (config, sharding-options) —
+# engines of the same model share compiled code instead of each instance
+# re-tracing through its own bound-method closures (a multi-engine
+# runtime otherwise pays the full compile set per engine)
+_JIT_CACHE: Dict[tuple, tuple] = {}
+
+
+def _jitted_fns(cfg: ModelConfig, env: ShardingEnv):
+    if env.mesh is not None:
+        key = None          # meshes aren't value-hashable: no sharing
+    else:
+        key = (cfg, tuple(sorted(env.opts.items())))
+    try:
+        fns = _JIT_CACHE.get(key) if key is not None else None
+    except TypeError:       # unhashable opt value: no sharing
+        key, fns = None, None
+    if fns is None:
+        def decode_fn(params, tokens, cache, positions):
+            return lm.decode_step(params, tokens, cache, positions, cfg,
+                                  env)
+
+        def prefill_fn(params, tokens, pad_to):
+            return lm.prefill(params, {"tokens": tokens}, cfg, env,
+                              max_len=pad_to)
+
+        fns = (jax.jit(decode_fn),
+               jax.jit(prefill_fn, static_argnames=("pad_to",)))
+        if key is not None:
+            _JIT_CACHE[key] = fns
+    return fns
+
+
 @dataclasses.dataclass
 class SlotState:
     session_id: Optional[str] = None
@@ -53,18 +90,8 @@ class Engine:
         self.regen_tokens = 0
         self.decode_steps = 0
 
-        self._jit_decode = jax.jit(self._decode_fn)
-        self._jit_prefill = jax.jit(self._prefill_fn,
-                                    static_argnames=("pad_to",))
-
-    # -- jitted kernels -----------------------------------------------------
-    def _decode_fn(self, params, tokens, cache, positions):
-        return lm.decode_step(params, tokens, cache, positions, self.cfg,
-                              self.env)
-
-    def _prefill_fn(self, params, tokens, pad_to):
-        batch = {"tokens": tokens}
-        return lm.prefill(params, batch, self.cfg, self.env, max_len=pad_to)
+        self._jit_decode, self._jit_prefill = _jitted_fns(self.cfg,
+                                                          self.env)
 
     # -- slot management -----------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -72,6 +99,11 @@ class Engine:
             if s.session_id is None:
                 return i
         return None
+
+    def used_slots(self) -> int:
+        """Occupied decode slots (ground truth for load reporting and
+        the runtime's conservation checks)."""
+        return sum(1 for s in self.slots if s.session_id is not None)
 
     def _write_slot(self, slot: int, k, v, length: int) -> None:
         """k/v: (L, S, K, dh) -> into the batched decode cache."""
@@ -83,13 +115,34 @@ class Engine:
         self.cache["v"] = self.cache["v"].at[:, slot].set(v)
         self.slots[slot].length = length
 
+    def _prefill_kv(self, tokens: np.ndarray):
+        """Prefill ``tokens`` and return (k, v) of shape (L, n, K, dh).
+
+        Token length is padded up to a 32-token compile bucket (the
+        jitted prefill specializes on sequence length, so unbucketed
+        variable-length agent prompts recompile per distinct length).
+        Padding is exact under the causal mask: positions < n attend to
+        the same key set either way, so their KV is bit-identical."""
+        n = len(tokens)
+        pad_to = min(self.max_len, -(-n // _PREFILL_BUCKET)
+                     * _PREFILL_BUCKET)
+        pad_to = max(pad_to, n)
+        padded = np.zeros(pad_to, np.int32)
+        padded[:n] = tokens
+        _, cache = self._jit_prefill(self.params, jnp.asarray(padded[None]),
+                                     pad_to=pad_to)
+        return cache["k"][:, 0, :n], cache["v"][:, 0, :n]
+
     # -- public API ------------------------------------------------------------
     def start_session(self, sid: str, tokens: np.ndarray,
-                      cached_hit: bool) -> int:
+                      cached_hit: bool) -> Optional[int]:
         """Admit a session: resume parked KV if present (prefill only the
-        delta) else full prefill.  Returns the slot id."""
+        delta) else full prefill.  Returns the slot id, or ``None`` when
+        every slot is occupied — the caller (the serving runtime) queues
+        the session instead of crashing."""
         slot = self.free_slot()
-        assert slot is not None, "no free slots (caller must wait)"
+        if slot is None:
+            return None
         tokens = np.asarray(tokens, np.int32)
         resumed = self.pool.resume(sid) if cached_hit else None
         if resumed is not None:
@@ -97,21 +150,16 @@ class Engine:
             delta = tokens[n:]
             self.pool.free_session(sid)
             if len(delta):
-                _, dcache = self._jit_prefill(
-                    self.params, jnp.asarray(delta[None]),
-                    pad_to=len(delta))
-                k = jnp.concatenate([k, dcache["k"][:, 0]], axis=1)
-                v = jnp.concatenate([v, dcache["v"][:, 0]], axis=1)
+                dk, dv = self._prefill_kv(delta)
+                k = jnp.concatenate([k, dk], axis=1)
+                v = jnp.concatenate([v, dv], axis=1)
                 self.prefill_tokens += len(delta)
             self._write_slot(slot, k, v, len(tokens))
         else:
-            _, cache = self._jit_prefill(self.params,
-                                         jnp.asarray(tokens[None]),
-                                         pad_to=len(tokens))
+            k, v = self._prefill_kv(tokens)
             self.prefill_tokens += len(tokens)
             self.regen_tokens += len(tokens)
-            self._write_slot(slot, cache["k"][:, 0], cache["v"][:, 0],
-                             len(tokens))
+            self._write_slot(slot, k, v, len(tokens))
         self.slots[slot].session_id = sid
         return slot
 
@@ -151,6 +199,31 @@ class Engine:
         ok = self.pool.park(sid, k, v, n)
         self.slots[slot] = SlotState()
         return ok
+
+    def release_session(self, sid: str) -> bool:
+        """Free a session's slot WITHOUT parking its KV (task finished:
+        nothing will resume, pooling the blocks would be a wasted copy)."""
+        slot = next((i for i, s in enumerate(self.slots)
+                     if s.session_id == sid), None)
+        if slot is None:
+            return False
+        self.slots[slot] = SlotState()
+        return True
+
+    # -- KV export/import (cross-engine migration + prefetch copies) --------
+    def export_kv(self, sid: str) -> Optional[Tuple[jnp.ndarray,
+                                                    jnp.ndarray, int]]:
+        """Gather a parked session's KV to contiguous (L, n, K, dh)
+        WITHOUT freeing its blocks — the transport half of a pool-to-pool
+        copy (work-steal migration, speculative prefetch)."""
+        return self.pool.resume(sid)
+
+    def import_kv(self, sid: str, k: jnp.ndarray, v: jnp.ndarray,
+                  n_tokens: int) -> bool:
+        """Land an exported KV prefix into this engine's pool.  Returns
+        False when the pool has no room (caller evicts and retries, or
+        abandons the copy)."""
+        return self.pool.park(sid, k, v, n_tokens)
 
     def evict_session(self, sid: str) -> None:
         self.pool.free_session(sid)

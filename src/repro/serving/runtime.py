@@ -1,0 +1,634 @@
+"""Event-driven concurrent serving runtime: whole agent workflows
+interleaved on real engines (the paper's serving layer, §3-§6).
+
+``ServingRuntime`` executes MANY concurrent multi-step agent sessions
+across multiple real ``Engine``s (actual jitted JAX forward passes —
+tiny zoo models on CPU, same code on TPU pods) under the same
+``GlobalCoordinator`` that drives the discrete-event simulator:
+
+  * **AFS-priority admission** — when an engine's decode slots are full,
+    sessions wait in a per-engine ``SessionQueue`` ordered by tenant
+    Agent-Fair-Share (§6), not FIFO.
+  * **Continuous batching** — all decode-phase sessions co-resident on
+    an engine advance together, one batched ``decode_step`` per virtual
+    decode round; sessions join/leave the batch mid-flight as prefills
+    complete and steps finish (per-slot rows are independent, so
+    interleaving is token-for-token identical to serial execution).
+  * **Park-on-tool with TTL** — a session entering a tool call parks its
+    slot KV into the engine's paged pool; the coordinator stamps the
+    entry with a tool-aware TTL (§4.2) and WA-LRU (§4.1) decides who
+    survives memory pressure.  Eviction decisions propagate to the real
+    block tables through an event-driven callback (the evicted-entry
+    list from ``on_step_end``), never a per-step scan of all sessions.
+  * **Resume with delta-only prefill** — a returning session that still
+    holds pool KV prefills only the new tokens (tool observation + next
+    user turn); a victim of eviction regenerates its whole context, the
+    paper's central cost.
+  * **Affinity routing + work stealing** — Eq. 7 routes a resuming
+    session to its KV home unless overloaded; the 100 ms epoch tick
+    (ported from the simulator's O(changes) incremental form: integer
+    load vector, indexed idle set, nonempty-queue victim index) lets an
+    idle engine steal a queued session, migrating its parked KV blocks
+    pool-to-pool.
+  * **Speculative prefetch with real copies** — during a tool gap the
+    prefetcher (§4.3) predicts the next step; if the home engine looks
+    overloaded for the resume, the parked KV is *replicated* to the
+    likely overflow target so the resume still hits cache.  Copies are
+    real block transfers that overlap the (virtual-time) tool gap.
+
+Time is virtual (``repro.serving.events.EventLoop``): tool gaps cost
+nothing on the wall clock, and identical-seed runs produce byte-identical
+``summarize()`` output even across processes with different
+``PYTHONHASHSEED`` — the same determinism contract as the simulator.
+Real compute (prefill, decode, KV copies) runs eagerly as its event is
+processed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.coordinator import GlobalCoordinator, SAGAConfig
+from repro.serving.engine import Engine
+from repro.serving.events import EventLoop, SessionQueue, _RuntimeQueueView
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class AgentRequest:
+    """One agent task: steps of (new prompt tokens, n decode tokens,
+    tool type, tool gap seconds).  ``arrival_s`` places the request on
+    the runtime's virtual clock (0 = immediately)."""
+    session_id: str
+    tenant: str
+    steps: List[Tuple[List[int], int, str, float]]
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class RuntimePerf:
+    """Virtual-time service model (per engine).  Real compute runs
+    eagerly; these rates only advance the deterministic clock, mirroring
+    ``cluster.perf.PerfModel`` at serving granularity."""
+    prefill_tokens_per_s: float = 8000.0
+    decode_round_s: float = 0.025        # one batched decode step
+    epoch_s: float = 0.100               # coordinator tick (§6)
+    migration_mean_s: float = 0.230      # Llumnix-style KV move (Table 7)
+    migration_p95_s: float = 0.890
+
+    def sample_migration_s(self, rng: random.Random) -> float:
+        mu = math.log(self.migration_mean_s) - 0.3
+        sigma = math.log(self.migration_p95_s /
+                         self.migration_mean_s) / 1.645 + 0.3
+        return min(math.exp(mu + sigma * rng.gauss(0, 1)), 5.0)
+
+
+@dataclasses.dataclass
+class SessionState:
+    """Mutable runtime record for one submitted agent session."""
+    req: AgentRequest
+    session_id: str
+    arrival: float
+    ctx: List[int] = dataclasses.field(default_factory=list)
+    step_idx: int = 0
+    engine: int = -1                 # engine owning the current step
+    slot: int = -1
+    remaining: int = 0               # decode tokens left this step
+    next_token: int = 0
+    state: str = "new"               # queued|prefill|decode|tool|migrating|done
+    cached_hit: bool = False         # admission's hit verdict (pinned)
+    regen_tokens: int = 0
+    finished_at: float = -1.0
+    step_outputs: List[List[int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def tct(self) -> float:
+        return self.finished_at - self.arrival
+
+
+@dataclasses.dataclass
+class _QueueTicket:
+    """One enqueue = one ticket.  The tombstone flag lives HERE, not on
+    the shared SessionState: a stolen session that re-enqueues elsewhere
+    must not resurrect its lazily-deleted entry in the victim's heap."""
+    session_id: str
+    cancelled: bool = False
+
+
+class ServingRuntime:
+    """Deterministic virtual-time event loop over ``n_workers`` real
+    engines.  ``submit`` requests, then ``run`` to completion; the
+    ``MultiWorkerServer`` wraps this serially for the legacy API."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_workers: int = 2,
+                 saga: Optional[SAGAConfig] = None, n_slots: int = 4,
+                 max_len: int = 512, pool_blocks: int = 48,
+                 perf: Optional[RuntimePerf] = None, seed: int = 0,
+                 engines: Optional[List[Engine]] = None):
+        self.cfg = cfg
+        self.engines = engines if engines is not None else [
+            Engine(cfg, params, n_slots=n_slots, max_len=max_len,
+                   pool_blocks=pool_blocks) for _ in range(n_workers)]
+        self.n_workers = len(self.engines)
+        self.n_slots = self.engines[0].n_slots
+        pool = self.engines[0].pool
+        self.kv_bytes_per_token = pool.bytes_per_block / pool.block
+        pool_bytes = pool.num_blocks * pool.bytes_per_block
+        self.co = GlobalCoordinator(saga or SAGAConfig(), self.n_workers,
+                                    pool_bytes)
+        self.perf = perf or RuntimePerf()
+        self.perf = dataclasses.replace(self.perf,
+                                        epoch_s=self.co.cfg.epoch_s)
+        self.rng = random.Random(seed)
+        self.ev = EventLoop()
+        self.sessions: Dict[str, SessionState] = {}
+        self.n_done = 0
+        # per-engine scheduling state (incremental epoch-tick structures
+        # ported from the simulator: integer load counts, nonempty-queue
+        # victim index, persistent stealer queue views)
+        self.queues: List[SessionQueue] = [SessionQueue()
+                                           for _ in range(self.n_workers)]
+        self._queue_views = [_RuntimeQueueView(lambda w=w: self.queues[w])
+                             for w in range(self.n_workers)]
+        self._active: List[set] = [set() for _ in range(self.n_workers)]
+        self._resident = [0] * self.n_workers    # prefill + decode sessions
+        self._round_live = [False] * self.n_workers
+        self._loadnum = np.zeros(self.n_workers, dtype=np.int64)
+        self._nonempty: set = set()
+        self._alive = [True] * self.n_workers
+        self._epoch_live = False
+        self.migrating: Dict[str, Tuple[int, int]] = {}
+        # instrumentation
+        self.migrations = 0
+        self.prefetch_copies = 0
+        self.prefetch_copy_bytes = 0.0
+        for w in range(self.n_workers):
+            self.co.on_worker_idle(w, 0.0)
+
+    # -- load reporting (shared with MultiWorkerServer._loads) ----------
+    def loads(self) -> np.ndarray:
+        """Queue-depth + slot-occupancy load vector in slot units: one
+        C-level division of the incrementally-maintained integer counts
+        (replaces the old binary free-slot hack)."""
+        return self._loadnum / self.n_slots
+
+    def _load_delta(self, w: int, d: int) -> None:
+        self._loadnum[w] += d
+
+    # -- submission -----------------------------------------------------
+    def submit(self, req: AgentRequest,
+               arrival: Optional[float] = None) -> SessionState:
+        sid = req.session_id
+        if sid in self.sessions:
+            raise ValueError(f"duplicate session id {sid!r}")
+        t = max(self.ev.now, req.arrival_s if arrival is None else arrival)
+        ses = SessionState(req, sid, t)
+        self.sessions[sid] = ses
+        self.ev.schedule(t, "arrival", (sid,))
+        if not self._epoch_live:
+            self._epoch_live = True
+            self.ev.schedule(self.ev.now + self.perf.epoch_s, "epoch")
+        return ses
+
+    def run(self, horizon_s: float = INF) -> Dict[str, SessionState]:
+        """Advance the virtual clock until every submitted session has
+        finished (or ``horizon_s``).  Resumable: later submits + runs
+        continue on the same clock."""
+        while self.ev:
+            if self.ev.peek_time() > horizon_s:
+                break
+            _, kind, args = self.ev.pop()
+            getattr(self, "_on_" + kind)(*args)
+            if kind != "epoch" and self.n_done == len(self.sessions):
+                break
+        return self.sessions
+
+    # -- step lifecycle -------------------------------------------------
+    def _on_arrival(self, sid: str) -> None:
+        ses = self.sessions[sid]
+        req = ses.req
+        tools = [t for _, _, t, _ in req.steps]
+        work_est = sum(len(p) / self.perf.prefill_tokens_per_s
+                       + n * self.perf.decode_round_s
+                       for p, n, _, _ in req.steps)
+        self.co.register_task(sid, req.tenant, tools,
+                              deadline=self.ev.now + 3600.0,
+                              work_est_s=work_est, now=self.ev.now,
+                              prefix_tokens=0)
+        self._begin_step(sid)
+
+    def _begin_step(self, sid: str) -> None:
+        ses = self.sessions[sid]
+        prompt = ses.req.steps[ses.step_idx][0]
+        ses.ctx.extend(int(t) for t in prompt)
+        w = self.co.route(sid, self.loads(), self.ev.now)
+        self._dispatch_to(sid, w)
+
+    def _dispatch_to(self, sid: str, w: int) -> None:
+        if self._resident[w] < self.n_slots and not self.queues[w]:
+            self._admit(sid, w)
+        else:
+            self._enqueue(sid, w)
+
+    def _enqueue(self, sid: str, w: int) -> None:
+        ses = self.sessions[sid]
+        ses.state = "queued"
+        ses.engine = w
+        prio = -self.co.afs.priority(ses.req.tenant)
+        if not self.queues[w]:           # empty -> nonempty transition
+            self._nonempty.add(w)
+            self.co.on_worker_busy(w)
+        self.queues[w].push(prio, self.ev.now, _QueueTicket(sid))
+        self._load_delta(w, 1)
+
+    def _queue_pop(self, w: int) -> Optional[SessionState]:
+        ticket = self.queues[w].pop()
+        if ticket is not None:
+            self._load_delta(w, -1)
+            if not self.queues[w]:
+                self._queue_went_empty(w)
+            return self.sessions[ticket.session_id]
+        return None
+
+    def _queue_remove(self, w: int, sid: str) -> Optional[SessionState]:
+        ticket = self.queues[w].remove(sid)
+        if ticket is not None:
+            self._load_delta(w, -1)
+            if not self.queues[w]:
+                self._queue_went_empty(w)
+            return self.sessions[sid]
+        return None
+
+    def _queue_went_empty(self, w: int) -> None:
+        self._nonempty.discard(w)
+        self.co.on_worker_idle(w, self.ev.now)
+
+    def _drain_queue(self, w: int) -> None:
+        while self.queues[w] and self._resident[w] < self.n_slots:
+            ses = self._queue_pop(w)
+            if ses is not None:
+                self._admit(ses.session_id, w)
+
+    def _admit(self, sid: str, w: int) -> None:
+        """Slot admission: resolve cache hit vs regeneration against both
+        the coordinator's policy view and the engine's real block table,
+        then schedule the decode-phase join for when the (virtual)
+        prefill completes.  The REAL prefill + slot write happen at that
+        event — a written slot is immediately part of every decode round,
+        so no round can touch a half-admitted session's cache
+        (``decode_step`` writes KV for every batch row)."""
+        ses = self.sessions[sid]
+        eng = self.engines[w]
+        ctx_len = len(ses.ctx)
+        hit, pf_tokens, bg_tokens = self.co.on_step_start(
+            sid, w, float(ctx_len), self.ev.now)
+        real_hit = hit and eng.has_cache(sid)
+        if hit and not real_hit:
+            # policy says cached but the blocks are gone (force-freed
+            # making room for a park): heal the metadata
+            self.co.drop_entry(sid, w, count_eviction=False)
+        if not hit and eng.has_cache(sid):
+            eng.evict_session(sid)           # policy evicted it earlier
+        if real_hit:
+            virt_prefill = float(pf_tokens)
+        else:
+            ses.regen_tokens += ctx_len
+            # a correct, warm speculative prefetch regenerated
+            # ``bg_tokens`` during the tool gap — off the critical path
+            virt_prefill = float(ctx_len) - float(bg_tokens)
+        ses.state = "prefill"
+        ses.engine = w
+        ses.slot = -1                        # assigned at prefill_done
+        ses.cached_hit = real_hit
+        self._resident[w] += 1
+        self._load_delta(w, 1)
+        done = self.ev.now + max(0.0, virt_prefill) \
+            / self.perf.prefill_tokens_per_s
+        self.ev.schedule(done, "prefill_done", (sid,))
+
+    def _on_prefill_done(self, sid: str) -> None:
+        ses = self.sessions[sid]
+        w = ses.engine
+        slot = self.engines[w].start_session(
+            sid, np.asarray(ses.ctx, np.int32), cached_hit=ses.cached_hit)
+        if slot is None:                     # _resident bounds admissions
+            raise RuntimeError(f"engine {w} slot accounting drifted")
+        ses.slot = slot
+        ses.state = "decode"
+        ses.remaining = int(ses.req.steps[ses.step_idx][1])
+        ses.next_token = int(ses.ctx[-1])
+        ses.step_outputs.append([])
+        self._active[w].add(sid)
+        if not self._round_live[w]:
+            self._round_live[w] = True
+            self.ev.schedule(self.ev.now + self.perf.decode_round_s,
+                             "round", (w,))
+
+    def _on_round(self, w: int) -> None:
+        """One continuous-batching decode round: every decode-phase
+        session on engine ``w`` advances one token in a single batched
+        forward pass.  Sessions whose step completed leave the batch
+        (their slot frees, the queue drains into it) while the rest keep
+        decoding — no barrier between sessions."""
+        active = sorted(self._active[w],
+                        key=lambda s: self.sessions[s].slot)
+        if not active:
+            self._round_live[w] = False
+            return
+        eng = self.engines[w]
+        slot_tokens = {self.sessions[s].slot: self.sessions[s].next_token
+                       for s in active}
+        out = eng.decode(slot_tokens, n_steps=1)
+        finished: List[str] = []
+        for sid in active:
+            ses = self.sessions[sid]
+            tok = int(out[ses.slot][0])
+            ses.ctx.append(tok)
+            ses.step_outputs[-1].append(tok)
+            ses.next_token = tok
+            ses.remaining -= 1
+            if ses.remaining == 0:
+                finished.append(sid)
+        for sid in finished:
+            self._active[w].discard(sid)
+            self._finish_decode(sid)
+        if self._active[w]:
+            self.ev.schedule(self.ev.now + self.perf.decode_round_s,
+                             "round", (w,))
+        else:
+            self._round_live[w] = False
+        self._drain_queue(w)
+
+    def _finish_decode(self, sid: str) -> None:
+        ses = self.sessions[sid]
+        w = ses.engine
+        eng = self.engines[w]
+        prompt, n_out, tool, gap_s = ses.req.steps[ses.step_idx]
+        self.co.afs.note_progress(
+            sid, len(prompt) / self.perf.prefill_tokens_per_s
+            + n_out * self.perf.decode_round_s)
+        if ses.step_idx + 1 >= len(ses.req.steps):
+            self._finish_task(sid)
+            return
+        ctx_len = len(ses.ctx)
+        entry_bytes = ctx_len * self.kv_bytes_per_token
+        evicted = self.co.on_step_end(sid, w, float(ctx_len), entry_bytes,
+                                      tool, self.ev.now)
+        # event-driven WA-LRU reconciliation: only the victims the policy
+        # actually picked lose their real blocks (the old server rescanned
+        # every cached session per step)
+        for evd in evicted:
+            eng.evict_session(evd.session_id)
+        if self.co.pools[w].contains(sid):
+            if not self._park_real(sid, w):
+                self.co.drop_entry(sid, w, count_eviction=False)
+                eng.release_session(sid)
+        else:
+            eng.release_session(sid)
+        ses.slot = -1
+        self._resident[w] -= 1
+        self._load_delta(w, -1)
+        ses.state = "tool"
+        job = self.co.prefetcher.inflight.get(sid)
+        if job is not None and job.issued_at == self.ev.now:
+            self.ev.schedule(job.ready_at, "prefetch", (sid, w))
+        self.ev.schedule(self.ev.now + float(gap_s), "tool_done", (sid,))
+
+    def _park_real(self, sid: str, w: int) -> bool:
+        """Move the session's slot KV into the engine pool, evicting
+        WA-LRU victims (policy + real blocks together) until it fits."""
+        eng = self.engines[w]
+        n = len(self.sessions[sid].ctx)
+        while not eng.pool.can_fit(n):
+            victim = self.co.pools[w].select_victim(self.ev.now)
+            if victim is None or victim.session_id == sid:
+                return False
+            self.co.drop_entry(victim.session_id, w)
+            eng.evict_session(victim.session_id)
+        return eng.park_session(sid)
+
+    def _finish_task(self, sid: str) -> None:
+        ses = self.sessions[sid]
+        w = ses.engine
+        self.engines[w].release_session(sid)
+        ses.slot = -1
+        self._resident[w] -= 1
+        self._load_delta(w, -1)
+        sites = self.co.cached_sites(sid)
+        self.co.task_finished(sid, self.ev.now)
+        for site in sites:                   # replicas included
+            self.engines[site].evict_session(sid)
+        ses.state = "done"
+        ses.finished_at = self.ev.now
+        self.n_done += 1
+        self._drain_queue(w)
+
+    def _on_tool_done(self, sid: str) -> None:
+        ses = self.sessions[sid]
+        if ses.state != "tool":
+            return
+        prompt, _, tool, gap_s = ses.req.steps[ses.step_idx]
+        self.co.on_tool_done(sid, tool, float(gap_s), float(len(prompt)),
+                             self.ev.now)
+        ses.step_idx += 1
+        self._begin_step(sid)
+
+    # -- epoch tick: AFS shares + work stealing -------------------------
+    def _on_epoch(self) -> None:
+        decision, _ = self.co.epoch_tick(
+            self.ev.now, self.loads(), self._queue_views,
+            alive=self._alive, victim_candidates=self._nonempty,
+            scan_queues=False)
+        if decision is not None and self.co.stealer.accept(
+                decision, len(self.queues[decision.victim]), self.ev.now):
+            ses = self._queue_remove(decision.victim, decision.session_id)
+            if ses is not None:
+                ses.state = "migrating"
+                self.migrating[ses.session_id] = (decision.victim,
+                                                  decision.thief)
+                self.migrations += 1
+                mig = self.perf.sample_migration_s(self.rng)
+                self.ev.schedule(self.ev.now + mig, "migr_done",
+                                 (ses.session_id, decision.victim,
+                                  decision.thief))
+        if self.n_done < len(self.sessions):
+            self.ev.schedule(self.ev.now + self.perf.epoch_s, "epoch")
+        else:
+            self._epoch_live = False
+
+    def _copy_kv(self, sid: str, src: int, dst: int) -> bool:
+        """Real pool-to-pool block copy (export, make room, import)."""
+        kv = self.engines[src].export_kv(sid)
+        if kv is None:
+            return False
+        k, v, n = kv
+        dst_eng = self.engines[dst]
+        while not dst_eng.pool.can_fit(n):
+            victim = self.co.pools[dst].select_victim(self.ev.now)
+            if victim is None or victim.session_id == sid:
+                return False
+            self.co.drop_entry(victim.session_id, dst)
+            dst_eng.evict_session(victim.session_id)
+        return dst_eng.import_kv(sid, k, v, n)
+
+    def _on_migr_done(self, sid: str, src: int, dst: int) -> None:
+        """A stolen session's KV transfer window elapsed: move the real
+        blocks and the cache entry (TTL state travels with it, §3.1),
+        then admit on the thief."""
+        if self.migrating.pop(sid, None) is None:
+            return
+        ses = self.sessions[sid]
+        if ses.state != "migrating":
+            return
+        if self.engines[src].has_cache(sid):
+            if self._copy_kv(sid, src, dst):
+                self.engines[src].evict_session(sid)
+                _, evicted = self.co.migrate_session(sid, src, dst,
+                                                     self.ev.now)
+                for evd in evicted:
+                    self.engines[dst].evict_session(evd.session_id)
+                if not self.co.pools[dst].contains(sid):
+                    # metadata didn't land (only pinned victims at the
+                    # thief): the imported blocks must not outlive it
+                    self.engines[dst].evict_session(sid)
+            # else: no room at the thief — the entry (and its blocks)
+            # stay home; this step runs on the thief and regenerates
+            # (§3.1), later steps may still resume the intact home copy
+        else:
+            self.co.router.set_home(sid, dst)
+        self._dispatch_to(sid, dst)
+
+    def _on_prefetch(self, sid: str, src: int) -> None:
+        """Speculative prefetch landing (§4.3): the bandwidth-delayed
+        copy window elapsed mid-tool-gap.  If the home engine looks too
+        loaded to take the resume (Eq. 7 would divert), replicate the
+        parked KV to the likely overflow target so the diverted resume
+        still hits cache."""
+        ses = self.sessions.get(sid)
+        if ses is None or ses.state != "tool":
+            return
+        if sid not in self.co.prefetcher.inflight:
+            return                            # superseded or resolved
+        loads = self.loads()
+        if float(loads[src]) < self.co.cfg.theta:
+            return                            # home will take the resume
+        masked = loads.astype(float).copy()
+        masked[src] = INF
+        dst = int(masked.argmin())
+        if dst == src or not self.engines[src].has_cache(sid):
+            return
+        inserted, evicted = self.co.replicate_entry(sid, src, dst,
+                                                    self.ev.now)
+        for evd in evicted:
+            self.engines[dst].evict_session(evd.session_id)
+        if not inserted:
+            return
+        if self._copy_kv(sid, src, dst):
+            self.prefetch_copies += 1
+            self.prefetch_copy_bytes += \
+                len(ses.ctx) * self.kv_bytes_per_token
+        else:
+            self.co.drop_entry(sid, dst, count_eviction=False)
+
+    # -- reporting ------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "prefill_tokens": sum(e.prefill_tokens for e in self.engines),
+            "regen_tokens": sum(e.regen_tokens for e in self.engines),
+            "decode_steps": sum(e.decode_steps for e in self.engines),
+            "coordinator_hits": self.co.cache_hits,
+            "coordinator_misses": self.co.cache_misses,
+        }
+
+    def summarize(self) -> dict:
+        """Deterministic run summary (the cross-process byte-identity
+        contract covers this dict's ``repr``)."""
+        done = [s for s in self.sessions.values() if s.finished_at >= 0]
+        tcts = sorted(s.tct for s in done)
+        n = len(tcts)
+        st = self.stats()
+        return {
+            "n_sessions": len(self.sessions),
+            "n_done": n,
+            "tct_mean": float(sum(tcts) / n) if n else 0.0,
+            "tct_p50": float(tcts[n // 2]) if n else 0.0,
+            "tct_p99": float(tcts[min(n - 1, int(0.99 * n))]) if n else 0.0,
+            "makespan": float(max((s.finished_at for s in done),
+                                  default=0.0)),
+            "prefill_tokens": int(st["prefill_tokens"]),
+            "regen_tokens": int(st["regen_tokens"]),
+            "decode_rounds": int(st["decode_steps"]),
+            "decoded_tokens": int(sum(len(o) for s in self.sessions.values()
+                                      for o in s.step_outputs)),
+            "cache_hits": int(self.co.cache_hits),
+            "cache_misses": int(self.co.cache_misses),
+            "steals": int(self.co.stealer.steals),
+            "migrations": int(self.migrations),
+            "prefetch_issued": int(self.co.prefetcher.issued),
+            "prefetch_correct": int(self.co.prefetcher.correct),
+            "prefetch_copies": int(self.prefetch_copies),
+            "prefetch_wasted_bytes": float(self.co.prefetcher.wasted_bytes),
+        }
+
+    # -- invariants -----------------------------------------------------
+    def check_conservation(self) -> None:
+        """Post-run lifecycle invariants: every submitted session
+        finished, no session stuck queued/migrating, every engine's
+        slots and pool blocks returned to free, the incremental load /
+        nonempty indices agree with ground truth, and the coordinator's
+        pool metadata mirrors the real block tables.  Raises listing
+        every violation."""
+        bad: List[str] = []
+        unfinished = sorted(s for s, st in self.sessions.items()
+                            if st.finished_at < 0)
+        if unfinished:
+            bad.append(f"sessions never finished: {unfinished[:5]}")
+        if self.n_done != len(self.sessions):
+            bad.append(f"n_done={self.n_done} != {len(self.sessions)}")
+        if self.migrating:
+            bad.append(f"migrations in limbo: {sorted(self.migrating)[:5]}")
+        for w, eng in enumerate(self.engines):
+            if self.queues[w]:
+                bad.append(f"engine {w} queue not drained")
+            if self._active[w]:
+                bad.append(f"engine {w} decode set not empty")
+            if eng.used_slots() != 0:
+                bad.append(f"engine {w} leaked {eng.used_slots()} slots")
+            if self._resident[w] != 0:
+                bad.append(f"engine {w} resident count "
+                           f"{self._resident[w]} != 0")
+            if self._loadnum[w] != 0:
+                bad.append(f"engine {w} load index drifted: "
+                           f"{self._loadnum[w]}")
+            if (w in self._nonempty):
+                bad.append(f"engine {w} nonempty index stale")
+            if eng.pool.tables:
+                bad.append(f"engine {w} leaked blocks for "
+                           f"{sorted(eng.pool.tables)[:5]}")
+            if len(set(eng.pool.free)) != eng.pool.num_blocks:
+                bad.append(f"engine {w} free list corrupt")
+            if self.co.pools[w].entries:
+                bad.append(f"engine {w} pool metadata not empty")
+        if abs(self.co.pools_used) > 1e-6:
+            bad.append(f"pools_used={self.co.pools_used}")
+        if bad:
+            raise RuntimeError("runtime conservation violated: "
+                               + "; ".join(bad))
+
+    def verify_pool_mirrors(self) -> None:
+        """Mid-run cross-check: every engine's real parked sessions must
+        be a subset of the coordinator's pool entries (a metadata entry
+        may transiently outlive its blocks during a resume, never the
+        reverse)."""
+        for w, eng in enumerate(self.engines):
+            extra = set(eng.pool.tables) - set(self.co.pools[w].entries)
+            if extra:
+                raise RuntimeError(
+                    f"engine {w} holds blocks with no pool entry: "
+                    f"{sorted(extra)[:5]}")

@@ -5,96 +5,60 @@ for multi-step agent sessions: route (Eq. 7) -> resume-or-prefill ->
 decode -> park with tool-TTL -> tool gap (virtual time) -> repeat.
 Demonstrates and MEASURES the paper's central quantity: prefilled tokens
 with and without workflow-atomic scheduling.
+
+This is now a thin SERIAL wrapper over the event-driven
+``repro.serving.runtime.ServingRuntime`` — one task submitted and run to
+completion at a time, preserving the original blocking ``run_task`` API
+(and its tests) while the runtime underneath is the same engine that
+interleaves many concurrent sessions.  Load reporting is the runtime's
+real queue-depth + slot-occupancy vector, not the old binary
+free-slot hack.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.coordinator import GlobalCoordinator, SAGAConfig
-from repro.serving.engine import Engine
+from repro.core.coordinator import SAGAConfig
+from repro.serving.runtime import AgentRequest, RuntimePerf, ServingRuntime
 
-
-@dataclasses.dataclass
-class AgentRequest:
-    """One agent task: steps of (new prompt tokens, n decode tokens,
-    tool type, tool gap seconds)."""
-    session_id: str
-    tenant: str
-    steps: List[Tuple[List[int], int, str, float]]
+__all__ = ["AgentRequest", "MultiWorkerServer"]
 
 
 class MultiWorkerServer:
     def __init__(self, cfg: ModelConfig, params, *, n_workers: int = 2,
                  saga: Optional[SAGAConfig] = None, n_slots: int = 4,
-                 max_len: int = 512, pool_blocks: int = 48):
+                 max_len: int = 512, pool_blocks: int = 48,
+                 perf: Optional[RuntimePerf] = None, seed: int = 0):
         self.cfg = cfg
-        self.engines = [Engine(cfg, params, n_slots=n_slots,
-                               max_len=max_len, pool_blocks=pool_blocks)
-                        for _ in range(n_workers)]
-        pool_bytes = self.engines[0].pool.num_blocks * \
-            self.engines[0].pool.bytes_per_block
-        self.co = GlobalCoordinator(saga or SAGAConfig(), n_workers,
-                                    pool_bytes)
-        self.clock = 0.0
-        self.kv_bytes_per_token = (
-            2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * 2)
+        self.runtime = ServingRuntime(cfg, params, n_workers=n_workers,
+                                      saga=saga, n_slots=n_slots,
+                                      max_len=max_len,
+                                      pool_blocks=pool_blocks,
+                                      perf=perf, seed=seed)
+        self.engines = self.runtime.engines
+        self.co = self.runtime.co
+        self.kv_bytes_per_token = self.runtime.kv_bytes_per_token
+
+    @property
+    def clock(self) -> float:
+        return self.runtime.ev.now
 
     def _loads(self) -> List[float]:
-        return [1.0 - (e.free_slot() is not None) * 0.9
-                for e in self.engines]
+        """Real queue-depth + slot-occupancy loads, shared with the
+        runtime's router and epoch tick."""
+        return [float(x) for x in self.runtime.loads()]
 
     def run_task(self, req: AgentRequest) -> Dict[str, float]:
-        """Execute a whole agent task through the cluster; returns stats."""
-        sid = req.session_id
-        tools = [t for _, _, t, _ in req.steps]
-        self.co.register_task(sid, req.tenant, tools,
-                              deadline=self.clock + 3600.0,
-                              work_est_s=60.0, now=self.clock,
-                              prefix_tokens=0)
-        ctx: List[int] = []
-        regen = 0
-        for (prompt, n_out, tool, gap_s) in req.steps:
-            ctx = ctx + list(prompt)
-            w = self.co.route(sid, self._loads(), self.clock)
-            eng = self.engines[w]
-            hit, _, _ = self.co.on_step_start(sid, w, len(ctx),
-                                              self.clock)
-            # the coordinator's hit means "the pool still holds it";
-            # verify against the real block table
-            real_hit = hit and eng.has_cache(sid)
-            if not real_hit and eng.has_cache(sid):
-                eng.evict_session(sid)      # policy said evict earlier
-            slot = eng.start_session(sid, np.asarray(ctx, np.int32),
-                                     cached_hit=real_hit)
-            if not real_hit:
-                regen += len(ctx)
-            gen = eng.decode({slot: int(ctx[-1])}, n_steps=n_out)[slot]
-            ctx = ctx + gen
-            eng.park_session(sid)
-            self.co.on_step_end(sid, w, len(ctx),
-                                len(ctx) * self.kv_bytes_per_token, tool,
-                                self.clock)
-            # WA-LRU eviction decisions apply to the real pool:
-            pool = self.co.pools[w]
-            for cached_sid in list(eng.pool.tables):
-                if cached_sid != sid and not pool.contains(cached_sid):
-                    eng.evict_session(cached_sid)
-            self.clock += gap_s
-            self.co.on_tool_done(sid, tool, gap_s, len(prompt), self.clock)
-        self.co.task_finished(sid, self.clock)
-        for eng in self.engines:
-            eng.evict_session(sid)
-        return {"regen_tokens": regen, "ctx_tokens": len(ctx)}
+        """Execute a whole agent task through the cluster; returns stats.
+        Serial: blocks until this task completes (the runtime's clock
+        keeps advancing across calls, so TTLs and AFS state carry over)."""
+        ses = self.runtime.submit(req, arrival=self.runtime.ev.now)
+        self.runtime.run()
+        if ses.finished_at < 0:
+            raise RuntimeError(f"task {req.session_id} did not finish")
+        return {"regen_tokens": float(ses.regen_tokens),
+                "ctx_tokens": float(len(ses.ctx))}
 
     def stats(self) -> dict:
-        return {
-            "prefill_tokens": sum(e.prefill_tokens for e in self.engines),
-            "regen_tokens": sum(e.regen_tokens for e in self.engines),
-            "decode_steps": sum(e.decode_steps for e in self.engines),
-            "coordinator_hits": self.co.cache_hits,
-            "coordinator_misses": self.co.cache_misses,
-        }
+        return self.runtime.stats()
