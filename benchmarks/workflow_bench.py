@@ -1,0 +1,158 @@
+"""Branching-workflow A/B benchmark: workflow-aware vs request-level on
+a retry-heavy AgentProgram mix (the unified submission API's CI gate).
+
+Drives the cluster simulator with GRAPH AgentPrograms — SWE-bench-style
+retry loops (``swebench_retry_programs``) plus WebArena-style
+conditional nav-vs-form branches (``webarena_branch_programs``) — whose
+branches actually execute via each program's seeded resolver, and whose
+declared AEGs reach the coordinator at admission (tier-a).  Compares:
+
+  * SAGA (workflow-aware: WA-LRU + TTL + affinity + stealing + AFS,
+    taken-edge node advancement, Eq. 9 work re-estimation), vs
+  * the request-level baseline (vLLM-style: no cache reuse, FCFS,
+    blind to the declared graph).
+
+The smoke gate asserts conservation for both, SAGA strictly ahead on
+regeneration, and byte-identical identical-seed summaries in-process
+AND across processes with different PYTHONHASHSEED — branch resolution
+must not leak any nondeterminism into the schedule.
+
+    PYTHONPATH=src:. python benchmarks/workflow_bench.py           # full
+    PYTHONPATH=src:. python benchmarks/workflow_bench.py --smoke   # CI
+
+CSV rows follow the house format: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.cluster import baselines as B
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import (swebench_retry_programs,
+                                    webarena_branch_programs)
+
+from benchmarks.common import emit, save_json
+
+SEED = 0
+
+
+def _mix(n_each: int, retry_p: float = 0.3):
+    return (swebench_retry_programs(n_programs=n_each, seed=SEED,
+                                    retry_p=retry_p) +
+            webarena_branch_programs(n_programs=n_each, seed=SEED))
+
+
+def _run(policy, n_each: int, n_workers: int):
+    sim = ClusterSim(_mix(n_each), policy, n_workers=n_workers,
+                     seed=SEED)
+    sim.run(horizon_s=7.2e6)
+    sim.check_conservation()
+    return sim, summarize(sim)
+
+
+def run_ab(n_each: int = 24, n_workers: int = 8) -> dict:
+    t0 = time.time()
+    saga_sim, saga = _run(B.saga(), n_each, n_workers)
+    saga_wall = time.time() - t0
+    t0 = time.time()
+    _, base = _run(B.vllm(), n_each, n_workers)
+    base_wall = time.time() - t0
+
+    paths = [saga_sim.tasks[p.program_id].path
+             for p in _mix(n_each)]
+    retries = sum(1 for pth in paths
+                  for a, b in zip(pth, pth[1:]) if b <= a)
+    if retries < 1:
+        raise AssertionError("retry-heavy mix took no retry edges")
+    if not saga["regen_tokens_total"] < base["regen_tokens_total"]:
+        raise AssertionError(
+            f"workflow-aware regen {saga['regen_tokens_total']} not "
+            f"below request-level {base['regen_tokens_total']}")
+    if base["cache_hit_rate"] != 0.0:
+        raise AssertionError("request-level baseline hit cache")
+
+    out = {
+        "n_programs": 2 * n_each,
+        "n_workers": n_workers,
+        "retry_edges_taken": retries,
+        "steps_executed": sum(len(p) for p in paths),
+        "saga": saga,
+        "reqlevel": base,
+        "regen_reduction_x": base["regen_tokens_total"]
+            / max(saga["regen_tokens_total"], 1e-9),
+        "tct_speedup_x": base["tct_mean"] / max(saga["tct_mean"], 1e-9),
+    }
+    emit("workflow_saga", saga_wall,
+         f"tct_mean={saga['tct_mean']:.2f} "
+         f"hit={saga['cache_hit_rate']:.3f} retries={retries}")
+    emit("workflow_reqlevel", base_wall,
+         f"tct_mean={base['tct_mean']:.2f}")
+    emit("workflow_ab", saga_wall + base_wall,
+         f"regen_reduction={out['regen_reduction_x']:.2f}x "
+         f"tct_speedup={out['tct_speedup_x']:.2f}x")
+    return out
+
+
+def _fingerprint(n_each: int = 12, n_workers: int = 4) -> str:
+    """Identical-seed branching run: summary bytes + every taken path
+    (the cross-process identity contract now covers branch resolution)."""
+    sim, s = _run(B.saga(), n_each, n_workers)
+    paths = [sim.tasks[p.program_id].path for p in _mix(n_each)]
+    return repr(s) + "|" + repr(paths)
+
+
+def smoke() -> None:
+    out = run_ab(n_each=12, n_workers=4)
+    a = _fingerprint()
+    assert a == _fingerprint(), "same-process summaries diverged"
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        r = subprocess.run([sys.executable, __file__, "--smoke-emit"],
+                           env=env, capture_output=True, text=True,
+                           timeout=240)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1], "cross-process summaries diverged"
+    assert a + "\n" == outs[0], "parent/child summaries diverged"
+    print(f"smoke ok: {out['n_programs']} branching programs, "
+          f"{out['retry_edges_taken']} retry edges taken, regen "
+          f"reduction {out['regen_reduction_x']:.2f}x, determinism "
+          f"green")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: A/B + conservation + determinism")
+    ap.add_argument("--smoke-emit", action="store_true",
+                    help="internal: print the determinism fingerprint")
+    args = ap.parse_args()
+    if args.smoke_emit:
+        print(_fingerprint())
+        return
+    if args.smoke:
+        smoke()
+        return
+    out = run_ab()
+    save_json("workflow_bench", out)
+    print(f"workflow-aware: tct_mean={out['saga']['tct_mean']:.2f}s "
+          f"hit_rate={out['saga']['cache_hit_rate']:.3f}")
+    print(f"request-level:  tct_mean={out['reqlevel']['tct_mean']:.2f}s")
+    print(f"{out['retry_edges_taken']} retry edges taken over "
+          f"{out['steps_executed']} executed steps; regen reduction "
+          f"{out['regen_reduction_x']:.2f}x, TCT speedup "
+          f"{out['tct_speedup_x']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,16 @@ migration costs), AFS fairness, optional fault injection and elastic
 scaling.  The GlobalCoordinator (repro.core) makes every policy
 decision; the simulator only advances time.
 
+Submission is the unified ``repro.workflow.AgentProgram`` API: legacy
+``Task`` lists compile to scripted programs (byte-identical execution),
+while explicit-graph and dynamic programs resolve their branches at
+park boundaries (``WorkflowInstance.resolve_next`` inside
+``_on_llm_done``) — retry loops and conditionals execute, the taken
+edge is threaded into the coordinator (``on_step_end(next_node=...)``),
+and a declared AEG reaches admission (``register_task(aeg=...)``) so
+reuse probability, prefetch targeting and Eq. 9 work estimates see the
+true branch structure.
+
 Routing modes (baseline matrix, §9.1 "Baselines"):
   session — Eq. 7 affinity (SAGA, SGLang-like cache-aware)
   least   — least-loaded per request (vLLM FCFS)
@@ -89,7 +99,7 @@ except ImportError:          # pragma: no cover - numpy ships with repo
 
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.cluster.perf import PerfModel
-from repro.cluster.workload import Task
+from repro.workflow.program import WorkflowInstance, as_instance
 
 INF = float("inf")
 
@@ -121,7 +131,7 @@ class SimPolicy:
 
 @dataclass
 class StepJob:
-    task: Task
+    task: WorkflowInstance
     step_idx: int
     enqueued_at: float
     worker: int = -1
@@ -273,13 +283,18 @@ class TaskMetrics:
 
 
 class ClusterSim:
-    def __init__(self, tasks: Sequence[Task], policy: SimPolicy,
+    def __init__(self, tasks: Sequence[object], policy: SimPolicy,
                  n_workers: int = 16, perf: Optional[PerfModel] = None,
                  seed: int = 0,
                  fault_plan: Optional[Sequence[Tuple[float, str, int]]] = None,
                  straggler: Optional[object] = None,
                  straggler_slowdown: float = 4.0):
-        self.tasks = {t.task_id: t for t in tasks}
+        # one submission API (repro.workflow): legacy Tasks compile to
+        # scripted AgentPrograms (byte-identical execution), explicit
+        # graph / dynamic programs resolve their branches as they run
+        insts = [as_instance(t) for t in tasks]
+        self.tasks: Dict[str, WorkflowInstance] = \
+            {t.task_id: t for t in insts}
         self.policy = policy
         self.perf = perf or PerfModel()
         self.rng = random.Random(seed)
@@ -294,7 +309,7 @@ class ClusterSim:
         self._attempt = itertools.count()    # in-flight step attempt ids
         self.now = 0.0
         self.active_tasks = 0
-        self.admission_queue: List[Task] = []
+        self.admission_queue: List[WorkflowInstance] = []
         self.mem_samples: List[Tuple[float, float]] = []   # (dt, util)
         self._last_mem_t = 0.0
         self._mem_min_dt = self.perf.epoch_s   # sampling granularity
@@ -458,7 +473,7 @@ class ClusterSim:
         if self.workers[w].alive:
             self.co.on_worker_idle(w, self.now)
 
-    def _route(self, task: Task) -> int:
+    def _route(self, task: WorkflowInstance) -> int:
         mode = self.policy.routing
         sid = task.task_id
         loads = self._loads()
@@ -486,9 +501,13 @@ class ClusterSim:
             return w
         return self.co.route(sid, loads, self.now)
 
-    def _ideal_time(self, task: Task) -> float:
+    def _ideal_time(self, task: WorkflowInstance) -> float:
+        """No-queue no-regen estimate over the workflow's nominal path
+        (scripted: the actual steps, so legacy Tasks are unchanged;
+        graph/dynamic: the expected path — branches resolve at run
+        time, so this is an estimate by construction)."""
         t = 0.0
-        for i, s in enumerate(task.steps):
+        for s in task.nominal_steps():
             t += self.perf.step_compute_s(0.0, s.new_prompt_tokens,
                                           s.out_tokens)
             t += s.tool_latency_s
@@ -499,20 +518,32 @@ class ClusterSim:
         task = self.tasks[task_id]
         self.metrics[task_id] = TaskMetrics(
             task_id, task.tenant, task.arrival_s,
-            ideal_s=self._ideal_time(task), steps=task.n_steps)
+            ideal_s=self._ideal_time(task),
+            steps=len(task.nominal_steps()))
         cap = self.policy.admission_max_tasks
         if cap is not None and self.active_tasks >= cap:
             self.admission_queue.append(task)
             return
         self._admit(task)
 
-    def _admit(self, task: Task) -> None:
+    def _admit(self, task: WorkflowInstance) -> None:
         self.active_tasks += 1
         work_est = self._ideal_time(task)
         deadline = self.now + 1.5 * work_est
+        aeg = task.declared_aeg()
+        step_cost = 0.0
+        if aeg is not None:
+            # mean GPU-seconds per step over the nominal path: the unit
+            # Eq. 9's work_remaining_steps is priced in
+            nom = task.nominal_steps()
+            gpu = sum(self.perf.step_compute_s(0.0, s.new_prompt_tokens,
+                                               s.out_tokens) for s in nom)
+            step_cost = gpu / max(len(nom), 1)
         self.co.register_task(task.task_id, task.tenant, task.tools(),
                               deadline, work_est, self.now,
-                              prefix_tokens=task.prefix_tokens)
+                              prefix_tokens=task.prefix_tokens,
+                              aeg=aeg, step_cost_s=step_cost,
+                              entry_node=task.path[0] if task.path else 0)
         self._enqueue_step(StepJob(task, 0, self.now))
 
     def _can_admit(self, w: int, job: StepJob) -> bool:
@@ -627,13 +658,18 @@ class ClusterSim:
         self._drain_queue(w)
         step = task.steps[i]
         ctx_after = task.context_after(i)
-        if i + 1 >= task.n_steps:
-            # final step's action is "finish" — no tool wait
+        # park boundary: resolve the taken edge (graph: seeded branch
+        # draw; dynamic: client callback; scripted: next listed step).
+        # Memoized, so fault-retried steps never re-roll the path.
+        if task.resolve_next(i) is None:
+            # terminal: the workflow's last action is "finish" — no
+            # tool wait
             m = self.metrics[task_id]
             if m.finish >= 0:
                 raise RuntimeError(f"task {task_id} finished twice")
             self.co.task_finished(task_id, self.now)
             m.finish = self.now
+            m.steps = task.n_steps          # actual executed path length
             self.active_tasks -= 1
             if self.admission_queue:
                 self._admit(self.admission_queue.pop(0))
@@ -643,7 +679,8 @@ class ClusterSim:
         ctx_cached = ctx_after - step.obs_tokens
         entry_bytes = ctx_cached * self.perf.kv_bytes_per_token
         self.co.on_step_end(task_id, w, ctx_cached, entry_bytes,
-                            step.tool, self.now)
+                            step.tool, self.now,
+                            next_node=task.next_node_hint(i + 1))
         self._push(self.now + step.tool_latency_s, "tool_done",
                    (task_id, i, w))
 

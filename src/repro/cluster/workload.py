@@ -61,24 +61,39 @@ class Task:
     arrival_s: float
     steps: List[Step]
     prefix_tokens: float = 1200.0   # shared system prompt + tool defs
+    # lazily-built cumulative token sums: context queries are O(1), not
+    # an O(n) prefix walk per call (which made the simulator's per-step
+    # context lookups O(n^2) over a 150-step SWE-bench task).  Rebuilt
+    # if the step list's length changes; steps are treated as immutable
+    # once queried (every generator here constructs them up front).
+    _cum: Optional[List[float]] = field(default=None, init=False,
+                                        repr=False, compare=False)
 
     @property
     def n_steps(self) -> int:
         return len(self.steps)
 
+    def _cumsum(self) -> List[float]:
+        cum = self._cum
+        if cum is None or len(cum) != len(self.steps) + 1:
+            c = self.prefix_tokens
+            cum = [c]
+            # same accumulation order as the original per-call loop, so
+            # every query is bit-identical to the O(n) path it replaces
+            for s in self.steps:
+                c = c + (s.new_prompt_tokens + s.out_tokens +
+                         s.obs_tokens)
+                cum.append(c)
+            self._cum = cum
+        return cum
+
     def context_after(self, step_idx: int) -> float:
         """Context tokens right after step step_idx's tool returns."""
-        ctx = self.prefix_tokens
-        for s in self.steps[:step_idx + 1]:
-            ctx += s.new_prompt_tokens + s.out_tokens + s.obs_tokens
-        return ctx
+        return self._cumsum()[step_idx + 1]
 
     def context_before(self, step_idx: int) -> float:
-        ctx = self.prefix_tokens
-        for s in self.steps[:step_idx]:
-            ctx += s.new_prompt_tokens + s.out_tokens + s.obs_tokens
-        ctx += self.steps[step_idx].new_prompt_tokens
-        return ctx
+        return self._cumsum()[step_idx] + \
+            self.steps[step_idx].new_prompt_tokens
 
     def tools(self) -> List[str]:
         return [s.tool for s in self.steps]
@@ -141,6 +156,11 @@ def make_task(task_id: str, tenant: str, workload: str, arrival: float,
 
 def poisson_arrivals(rate_per_min: float, horizon_s: float,
                      rng: random.Random) -> List[float]:
+    if rate_per_min <= 0.0 or horizon_s <= 0.0:
+        # zero offered load is a valid workload knob (e.g. disabling a
+        # tenant class in a sweep); it used to ZeroDivisionError inside
+        # expovariate
+        return []
     out, t = [], 0.0
     lam = rate_per_min / 60.0
     while True:
@@ -162,11 +182,12 @@ def swebench_workload(n_tasks: int = 500, rate_per_min: float = 8.0,
 
 
 def webarena_workload(n_tasks: int = 812, rate_per_min: float = 8.0,
-                      seed: int = 0) -> List[Task]:
+                      seed: int = 0, cv_scale: float = 1.0) -> List[Task]:
     rng = random.Random(seed + 1)
     horizon = n_tasks / (rate_per_min / 60.0) * 1.2
     arr = poisson_arrivals(rate_per_min, horizon, rng)[:n_tasks]
-    return [make_task(f"web-{i}", "tenant0", "webarena", t, rng)
+    return [make_task(f"web-{i}", "tenant0", "webarena", t, rng,
+                      cv_scale=cv_scale)
             for i, t in enumerate(arr)]
 
 
@@ -252,8 +273,130 @@ def runtime_requests(n_sessions: int = 16, vocab: int = 512,
     return reqs
 
 
+# --- branching AgentProgram generators (repro.workflow) --------------------
+def swebench_retry_programs(n_programs: int = 16, rate_per_min: float = 4.0,
+                            seed: int = 0, retry_p: float = 0.25,
+                            n_nodes: int = 10, p_term: float = 0.02,
+                            max_steps: int = 48) -> List:
+    """SWE-bench-style mix as GRAPH AgentPrograms with executable retry
+    loops: a chain of edit/test nodes where every ``code_execution``
+    node carries a backward retry edge (test failed -> re-edit) taken
+    with probability ``retry_p``.  The declared AEG reaches the
+    coordinator at admission (tier-a), so reuse probability, prefetch
+    targeting and Eq. 9 work estimates see the true loop structure —
+    and the loops actually execute via each program's seeded resolver."""
+    # lazy: repro.workflow imports this module at top level
+    from repro.workflow.program import AgentProgram, StepSpec
+
+    rng = random.Random(seed + 7)
+    horizon = n_programs / max(rate_per_min / 60.0, 1e-9) * 1.2
+    arr = poisson_arrivals(rate_per_min, horizon, rng)[:n_programs]
+    while len(arr) < n_programs:          # tail draws past the horizon
+        arr.append((arr[-1] if arr else 0.0) + rng.uniform(1.0, 10.0))
+    progs = []
+    for i, t in enumerate(arr):
+        nodes = {}
+        edges = []
+        for v in range(n_nodes):
+            tool = rng.choice(_SWE_TOOLS)
+            nodes[v] = StepSpec(
+                tool,
+                new_prompt_tokens=rng.uniform(150, 500),
+                out_tokens=rng.uniform(100, 500),
+                obs_tokens=rng.uniform(300, 3000),
+                tool_latency_s=None)          # fresh draw per execution
+            if v + 1 < n_nodes:
+                retry = retry_p if tool == "code_execution" and v > 0 \
+                    else 0.0
+                edges.append((v, v + 1, (1.0 - p_term) * (1.0 - retry)))
+                if retry > 0.0:
+                    edges.append((v, v - 1, (1.0 - p_term) * retry))
+        progs.append(AgentProgram.graph(
+            f"swe-retry-{i}", f"tenant{i % 4}", nodes, edges,
+            arrival_s=t, seed=seed * 1000 + i, max_steps=max_steps,
+            prefix_tokens=1200.0, workload="swebench"))
+    return progs
+
+
+def webarena_branch_programs(n_programs: int = 16,
+                             rate_per_min: float = 4.0, seed: int = 0,
+                             nav_p: float = 0.55,
+                             max_steps: int = 32) -> List:
+    """WebArena-style conditional workflows: after the landing page the
+    agent either NAVIGATES (browse-heavy subchain: big page deltas,
+    web_api tools) or FILLS A FORM (form subchain: file/db lookups,
+    small deltas), converging on a final submit node.  The branch is a
+    real conditional edge pair resolved per program at run time, and
+    both subchains are visible to the scheduler in the declared AEG."""
+    from repro.workflow.program import AgentProgram, StepSpec
+
+    rng = random.Random(seed + 13)
+    horizon = n_programs / max(rate_per_min / 60.0, 1e-9) * 1.2
+    arr = poisson_arrivals(rate_per_min, horizon, rng)[:n_programs]
+    while len(arr) < n_programs:
+        arr.append((arr[-1] if arr else 0.0) + rng.uniform(1.0, 10.0))
+    progs = []
+    for i, t in enumerate(arr):
+        def page(lo, hi, tool="web_api", obs=(400, 1600)):
+            return StepSpec(tool, new_prompt_tokens=rng.uniform(lo, hi),
+                            out_tokens=rng.uniform(50, 200),
+                            obs_tokens=rng.uniform(*obs),
+                            tool_latency_s=None)
+        # 0: landing  1-3: nav subchain  4-5: form subchain  6: submit
+        nodes = {0: page(4000, 8000),
+                 1: page(600, 1200), 2: page(600, 1200),
+                 3: page(600, 1200),
+                 4: page(200, 500, "file_operations", (100, 400)),
+                 5: page(150, 400, "database_query", (100, 400)),
+                 6: page(300, 700)}
+        edges = [(0, 1, nav_p), (0, 4, 0.97 - nav_p),        # the branch
+                 (1, 2, 0.95), (2, 3, 0.95), (3, 6, 0.9),
+                 (4, 5, 0.95), (5, 6, 0.9)]
+        progs.append(AgentProgram.graph(
+            f"web-branch-{i}", f"tenant{i % 4}", nodes, edges,
+            arrival_s=t, seed=seed * 1000 + i, max_steps=max_steps,
+            prefix_tokens=1200.0, workload="webarena"))
+    return progs
+
+
+def runtime_programs(n_sessions: int = 8, seed: int = 0,
+                     retry_p: float = 0.35, n_nodes: int = 4,
+                     max_steps: int = 10) -> List:
+    """Branching graph programs sized for the serving runtime's micro
+    models: small token counts, short tool gaps, a retry edge on the
+    test node.  Prompt token ids are left unspecified — the runtime
+    realizes them deterministically from each program's seed against
+    the model's vocab."""
+    from repro.workflow.program import AgentProgram, StepSpec
+
+    rng = random.Random(seed + 17)
+    progs = []
+    for i in range(n_sessions):
+        nodes = {}
+        edges = []
+        for v in range(n_nodes):
+            tool = rng.choice(_SWE_TOOLS)
+            nodes[v] = StepSpec(tool,
+                                new_prompt_tokens=float(rng.randint(6, 14)),
+                                n_out=rng.randint(2, 4),
+                                obs_tokens=float(rng.randint(4, 12)),
+                                tool_latency_s=round(
+                                    rng.uniform(0.05, 0.4), 3))
+            if v + 1 < n_nodes:
+                retry = retry_p if v == n_nodes - 2 else 0.0
+                edges.append((v, v + 1, 0.98 * (1.0 - retry)))
+                if retry > 0.0:
+                    edges.append((v, max(v - 1, 0), 0.98 * retry))
+        progs.append(AgentProgram.graph(
+            f"rt-wf-{i}", f"tenant{i % 4}", nodes, edges,
+            arrival_s=rng.uniform(0.0, 1.0), seed=seed * 100 + i,
+            max_steps=max_steps, workload="runtime"))
+    return progs
+
+
 def burstgpt_workload(horizon_s: float = 1800.0, seed: int = 0,
-                      load_factor: float = 0.5) -> List[Task]:
+                      load_factor: float = 0.5,
+                      cv_scale: float = 1.0) -> List[Task]:
     """10 tenants: 3 heavy (100-step), 4 medium (30-step), 3 light
     (10-step).  ``load_factor`` scales the paper's nominal 16/8/4
     tasks/min/tenant so aggregate offered load sits at ~80% of the
@@ -269,6 +412,7 @@ def burstgpt_workload(horizon_s: float = 1800.0, seed: int = 0,
         for j, t in enumerate(poisson_arrivals(rate, horizon_s, rng)):
             tasks.append(make_task(f"{tenant}-task{j}", tenant, "burstgpt",
                                    t, rng, n_steps=max(
-                                       2, int(rng.gauss(steps, steps * 0.15)))))
+                                       2, int(rng.gauss(steps, steps * 0.15))),
+                                   cv_scale=cv_scale))
     tasks.sort(key=lambda t: t.arrival_s)
     return tasks

@@ -178,6 +178,17 @@ class AFSScheduler:
             if np is not None:     # scalar fallback has no columns to sync
                 self._dirty.add(task_id)
 
+    def set_work(self, task_id: str, work_s: float) -> None:
+        """Replace a task's Eq. 9 work-remaining estimate outright (the
+        coordinator re-derives it from the declared AEG's branch
+        structure each step).  Same dirty-row protocol as
+        ``note_progress`` — flushed O(|dirty|) on the next epoch."""
+        t = self.tasks.get(task_id)
+        if t:
+            t.work_remain_s = max(0.0, work_s)
+            if np is not None:
+                self._dirty.add(task_id)
+
     # -- Eq. 8 -------------------------------------------------------------
     def _accumulate(self, now: float) -> Dict[str, float]:
         """Per-tenant AFS numerators in tenant first-seen order."""

@@ -83,6 +83,11 @@ class SessionInfo:
     cur_tool: str = "unknown"
     tools_seen: List[str] = field(default_factory=list)
     prefix_tokens: float = 0.0
+    # tier-a explicit graph (client-declared AEG): node advancement
+    # follows the substrate-reported taken edge, prefetch targets the
+    # resolved next node, and AFS work is re-estimated from Eq. 9
+    declared: bool = False
+    step_cost_s: float = 0.0      # mean GPU-seconds per step (Eq. 9)
 
 
 class GlobalCoordinator:
@@ -158,15 +163,35 @@ class GlobalCoordinator:
     def register_task(self, session_id: str, tenant: str,
                       planned_tools: Optional[Sequence[str]],
                       deadline: float, work_est_s: float,
-                      now: float, prefix_tokens: float = 0.0) -> None:
-        aeg = None
-        if self.cfg.observability == "hints" and planned_tools:
-            aeg = AEG.linear_chain(list(planned_tools))
-        elif self.cfg.observability == "pattern":
-            first = planned_tools[0] if planned_tools else "unknown"
-            aeg = self.inferencer.infer(first)
+                      now: float, prefix_tokens: float = 0.0,
+                      aeg: Optional[AEG] = None,
+                      step_cost_s: float = 0.0,
+                      entry_node: int = 0) -> None:
+        """Admit a workflow.  ``aeg`` is the client-declared execution
+        graph (tier-a observability, §3.3): honored only when the
+        scheduler is configured to see workflow hints — baselines that
+        model request-level systems (``observability="none"``) stay
+        blind even when the client declares, and ``"pattern"`` mode
+        deliberately ignores hints to measure inference quality.  With
+        a declared graph, node advancement follows the taken edge
+        reported by the substrate (``on_step_end(next_node=...)``) and
+        AFS work-remaining re-estimates from Eq. 9 each step."""
+        declared = False
+        node_id = 0
+        if aeg is not None and self.cfg.observability == "hints":
+            declared = True
+            node_id = entry_node
+        else:
+            aeg = None
+            if self.cfg.observability == "hints" and planned_tools:
+                aeg = AEG.linear_chain(list(planned_tools))
+            elif self.cfg.observability == "pattern":
+                first = planned_tools[0] if planned_tools else "unknown"
+                aeg = self.inferencer.infer(first)
         self.sessions[session_id] = SessionInfo(
-            session_id, tenant, aeg, prefix_tokens=prefix_tokens)
+            session_id, tenant, aeg, node_id=node_id,
+            prefix_tokens=prefix_tokens, declared=declared,
+            step_cost_s=step_cost_s)
         if self.cfg.enable_afs:
             self.afs.add_task(TaskProgress(session_id, tenant, deadline,
                                            work_est_s))
@@ -230,8 +255,14 @@ class GlobalCoordinator:
         entry = pool.lookup(session_id, now)
         prefetch_hit = False
         if info is not None and self.cfg.enable_prefetch:
+            # declared graphs: the taken edge was resolved at the park
+            # boundary, so the step being started IS node_id and the
+            # prefetch (targeted at it) resolves exactly; linear-chain
+            # sessions keep the legacy successor-id convention
+            expected = info.node_id if info.declared \
+                else info.node_id + 1
             prefetch_hit = self.prefetcher.resolve(
-                session_id, info.node_id + 1, now)
+                session_id, expected, now)
         if entry is not None:
             entry.pinned = True
             self.cache_hits += 1
@@ -319,22 +350,33 @@ class GlobalCoordinator:
             e.pinned = False
 
     def on_step_end(self, session_id: str, worker: int, ctx_tokens: float,
-                    entry_bytes: float, next_tool: str, now: float
-                    ) -> List[CacheEntry]:
+                    entry_bytes: float, next_tool: str, now: float,
+                    next_node: Optional[int] = None) -> List[CacheEntry]:
         """LLM step done; session enters a tool call.  Unpins the
         step's hit entry, then inserts/updates the cache entry with a
-        tool-aware TTL and maybe issues a prefetch.  Returns evicted
-        entries."""
+        tool-aware TTL and maybe issues a prefetch.  ``next_node`` is
+        the AEG node the *taken edge* leads to (declared graphs —
+        branch/retry structure); None keeps the legacy linear
+        advancement.  Returns evicted entries."""
         self.unpin(session_id, worker)
         info = self.sessions.get(session_id)
         if info is not None:
-            info.node_id += 1
+            info.node_id = info.node_id + 1 if next_node is None \
+                else next_node
             info.ctx_tokens = ctx_tokens
             info.cur_tool = next_tool
             info.tools_seen.append(next_tool)
             if (self.cfg.observability == "pattern"
                     and info.aeg is not None):
                 info.aeg = self.inferencer.infer(next_tool)
+            if (info.declared and info.aeg is not None
+                    and info.step_cost_s > 0.0 and self.cfg.enable_afs):
+                # Eq. 9 on the true branch structure: expected remaining
+                # steps from the node the taken edge reached
+                self.afs.set_work(
+                    session_id,
+                    info.aeg.work_remaining_steps(info.node_id)
+                    * info.step_cost_s)
         pool = self.pools[worker]
         m = memory_pressure(pool.utilization(), self.cfg.th_low,
                             self.cfg.th_high)
@@ -355,9 +397,13 @@ class GlobalCoordinator:
         else:            # replaced-but-didn't-fit: old entry is gone too
             self._site_discard(session_id, worker)
         if info is not None and self.cfg.enable_prefetch:
+            # declared graphs prefetch the RESOLVED next node (the taken
+            # edge, known at this park boundary) instead of speculating
+            # on the argmax successor
+            target = info.node_id if info.declared else None
             self.prefetcher.maybe_issue(session_id, info.aeg, info.node_id,
                                         entry_bytes, now,
-                                        pool.utilization())
+                                        pool.utilization(), target=target)
         return evicted
 
     def on_tool_done(self, session_id: str, tool: str, latency_s: float,
@@ -481,16 +527,32 @@ class GlobalCoordinator:
         return self.n_workers - 1
 
     # -- checkpoint/restart ------------------------------------------------
+    @staticmethod
+    def _session_snap(v: SessionInfo) -> dict:
+        snap = {
+            "tenant": v.tenant, "node_id": v.node_id,
+            "ctx_tokens": v.ctx_tokens, "cur_tool": v.cur_tool,
+            "tools_seen": list(v.tools_seen),
+            "prefix_tokens": v.prefix_tokens,
+            "declared": v.declared, "step_cost_s": v.step_cost_s,
+        }
+        if v.declared and v.aeg is not None:
+            # the declared graph must survive restarts: Eq. 9 set_work
+            # and prefetch targeting run on it after restore
+            snap["aeg_nodes"] = {int(nid): n.tool
+                                 for nid, n in v.aeg.nodes.items()}
+            snap["aeg_edges"] = [(int(nid), int(u), float(p))
+                                 for nid, n in v.aeg.nodes.items()
+                                 for u, p in n.succs]
+            snap["aeg_p_term"] = v.aeg.p_term
+        return snap
+
     def snapshot(self) -> dict:
         return {
             "cfg": asdict(self.cfg),
             "router_home": dict(self.router.home),
-            "sessions": {k: {
-                "tenant": v.tenant, "node_id": v.node_id,
-                "ctx_tokens": v.ctx_tokens, "cur_tool": v.cur_tool,
-                "tools_seen": list(v.tools_seen),
-                "prefix_tokens": v.prefix_tokens,
-            } for k, v in self.sessions.items()},
+            "sessions": {k: self._session_snap(v)
+                         for k, v in self.sessions.items()},
             "ttl_hist": {k: list(v) for k, v in self.ttl.hist.items()},
             "inferencer_counts": {a: dict(b) for a, b in
                                   self.inferencer.counts.items()},
@@ -503,9 +565,20 @@ class GlobalCoordinator:
         for k, sv in snap["sessions"].items():
             info = SessionInfo(k, sv["tenant"], None, sv["node_id"],
                                sv["ctx_tokens"], sv["cur_tool"],
-                               list(sv["tools_seen"]), sv["prefix_tokens"])
-            if self.cfg.observability == "hints":
-                info.aeg = AEG.linear_chain(
+                               list(sv["tools_seen"]), sv["prefix_tokens"],
+                               declared=sv.get("declared", False),
+                               step_cost_s=sv.get("step_cost_s", 0.0))
+            if info.declared and sv.get("aeg_nodes"):
+                # rebuild the declared graph exactly (int() for snapshots
+                # that round-tripped through JSON string keys)
+                tools = {int(n): t for n, t in sv["aeg_nodes"].items()}
+                edges = [(int(u), int(w), float(p))
+                         for u, w, p in sv["aeg_edges"]]
+                info.aeg = AEG.from_edges(
+                    tools, edges, p_term=sv.get("aeg_p_term", 0.03))
+            elif self.cfg.observability == "hints":
+                info.declared = False      # graph lost: fall back to
+                info.aeg = AEG.linear_chain(   # linear-chain hints
                     info.tools_seen[-1:] * 4 or ["unknown"])
             self.sessions[k] = info
         self.ttl.hist = {k: list(v) for k, v in snap["ttl_hist"].items()}

@@ -36,12 +36,17 @@ class SpeculativePrefetcher:
 
     def maybe_issue(self, session_id: str, aeg: Optional[AEG],
                     node_id: int, entry_bytes: float, now: float,
-                    pool_used_frac: float) -> Optional[PrefetchJob]:
+                    pool_used_frac: float,
+                    target: Optional[int] = None) -> Optional[PrefetchJob]:
         """Issue a prefetch for the argmax successor if spare memory
-        exists.  Returns the job (simulator schedules ready_at)."""
+        exists.  ``target`` overrides the successor prediction with an
+        already-resolved node (declared graphs: the taken edge is known
+        at the park boundary, so the prefetch is exact, not
+        speculative).  Returns the job (simulator schedules ready_at)."""
         if aeg is None or pool_used_frac > 1.0 - self.spare:
             return None
-        succ = aeg.most_likely_successor(node_id)
+        succ = target if target is not None \
+            else aeg.most_likely_successor(node_id)
         if succ is None:
             return None
         # an in-flight job for the same session is superseded, never

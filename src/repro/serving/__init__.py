@@ -21,6 +21,15 @@ Architecture map (module -> paper section):
     work stealing with real KV block migration (§5), speculative
     prefetch as real pool-to-pool copies overlapping tool gaps (§4.3),
     and the 100 ms incremental AFS epoch tick (§6).
+
+    Submission is the unified ``repro.workflow.AgentProgram`` API —
+    scripted (legacy ``AgentRequest``s compile to it byte-identically),
+    explicit-graph (declared AEG + seeded branch resolution: retry and
+    conditional edges execute, and the scheduler sees the true
+    structure), and dynamic (a client callback decides each next step
+    from the real decoded tokens at park/resume boundaries).
+    ``submit`` returns a ``WorkflowHandle`` (``result()`` /
+    ``step_outputs`` / ``status`` / taken ``path``).
   * ``server.MultiWorkerServer`` — legacy blocking facade: a thin
     serial wrapper over the runtime.
 """

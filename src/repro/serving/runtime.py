@@ -56,6 +56,7 @@ from repro.configs.base import ModelConfig
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.serving.engine import Engine
 from repro.serving.events import EventLoop, SessionQueue, _RuntimeQueueView
+from repro.workflow.program import WorkflowInstance, as_instance
 
 INF = float("inf")
 
@@ -64,7 +65,11 @@ INF = float("inf")
 class AgentRequest:
     """One agent task: steps of (new prompt tokens, n decode tokens,
     tool type, tool gap seconds).  ``arrival_s`` places the request on
-    the runtime's virtual clock (0 = immediately)."""
+    the runtime's virtual clock (0 = immediately).
+
+    Backward-compat adapter format: ``submit`` compiles it to a
+    scripted ``repro.workflow.AgentProgram`` (byte-identical execution);
+    graph / dynamic programs are submitted directly."""
     session_id: str
     tenant: str
     steps: List[Tuple[List[int], int, str, float]]
@@ -92,7 +97,7 @@ class RuntimePerf:
 @dataclasses.dataclass
 class SessionState:
     """Mutable runtime record for one submitted agent session."""
-    req: AgentRequest
+    inst: WorkflowInstance
     session_id: str
     arrival: float
     ctx: List[int] = dataclasses.field(default_factory=list)
@@ -121,10 +126,70 @@ class _QueueTicket:
     cancelled: bool = False
 
 
+class WorkflowHandle:
+    """Client-facing handle for one submitted workflow (returned by
+    ``ServingRuntime.submit``): inspect ``status`` / ``step_outputs`` /
+    ``path`` while the runtime interleaves, or block on ``result()``."""
+
+    def __init__(self, runtime: "ServingRuntime", ses: "SessionState"):
+        self._rt = runtime
+        self._ses = ses
+
+    @property
+    def session_id(self) -> str:
+        return self._ses.session_id
+
+    @property
+    def status(self) -> str:
+        """new|queued|prefill|decode|tool|migrating|done"""
+        return self._ses.state
+
+    @property
+    def done(self) -> bool:
+        return self._ses.finished_at >= 0
+
+    @property
+    def step_outputs(self) -> List[List[int]]:
+        """Decoded token ids per executed step (so far)."""
+        return [list(o) for o in self._ses.step_outputs]
+
+    @property
+    def path(self) -> List[int]:
+        """AEG node ids of the executed steps (so far) — shows which
+        branches / retry edges the workflow actually took."""
+        return list(self._ses.inst.path)
+
+    @property
+    def truncated(self) -> bool:
+        """True when the engine's context cap ended the workflow before
+        its graph/callback did — the taken path is then a strict prefix
+        of what an unconstrained substrate would execute."""
+        return self._ses.inst.truncated
+
+    @property
+    def tct(self) -> float:
+        if not self.done:
+            raise RuntimeError(f"workflow {self.session_id} not finished")
+        return self._ses.tct
+
+    def result(self, horizon_s: float = INF) -> List[List[int]]:
+        """Drive the runtime's virtual clock until this workflow
+        finishes, then return its per-step decoded token ids.  Other
+        concurrent sessions keep interleaving while we wait."""
+        if not self.done:
+            self._rt._run_until_done(self._ses.session_id, horizon_s)
+        if not self.done:
+            raise RuntimeError(
+                f"workflow {self.session_id} did not finish "
+                f"(state={self.status})")
+        return self.step_outputs
+
+
 class ServingRuntime:
     """Deterministic virtual-time event loop over ``n_workers`` real
-    engines.  ``submit`` requests, then ``run`` to completion; the
-    ``MultiWorkerServer`` wraps this serially for the legacy API."""
+    engines.  ``submit`` accepts ``AgentProgram``s (scripted / graph /
+    dynamic) and legacy ``AgentRequest``s, then ``run`` to completion;
+    the ``MultiWorkerServer`` wraps this serially for the legacy API."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_workers: int = 2,
                  saga: Optional[SAGAConfig] = None, n_slots: int = 4,
@@ -182,19 +247,30 @@ class ServingRuntime:
         self._loadnum[w] += d
 
     # -- submission -----------------------------------------------------
-    def submit(self, req: AgentRequest,
-               arrival: Optional[float] = None) -> SessionState:
-        sid = req.session_id
+    def submit(self, req,
+               arrival: Optional[float] = None) -> "WorkflowHandle":
+        """Submit a workflow: an ``AgentProgram`` (scripted / graph /
+        dynamic) or a legacy ``AgentRequest`` (compiled to a scripted
+        program, byte-identical execution).  Graph and dynamic programs
+        resolve their branches at park/resume boundaries on the virtual
+        clock; unspecified prompt ids are realized deterministically
+        from the program's seed against this model's vocab.  Returns a
+        ``WorkflowHandle`` (``result()`` / ``step_outputs`` /
+        ``status``)."""
+        inst = as_instance(req, vocab=self.cfg.vocab,
+                           max_ctx_tokens=self.engines[0].max_len)
+        sid = inst.task_id
         if sid in self.sessions:
             raise ValueError(f"duplicate session id {sid!r}")
-        t = max(self.ev.now, req.arrival_s if arrival is None else arrival)
-        ses = SessionState(req, sid, t)
+        t = max(self.ev.now,
+                inst.arrival_s if arrival is None else arrival)
+        ses = SessionState(inst, sid, t)
         self.sessions[sid] = ses
         self.ev.schedule(t, "arrival", (sid,))
         if not self._epoch_live:
             self._epoch_live = True
             self.ev.schedule(self.ev.now + self.perf.epoch_s, "epoch")
-        return ses
+        return WorkflowHandle(self, ses)
 
     def run(self, horizon_s: float = INF) -> Dict[str, SessionState]:
         """Advance the virtual clock until every submitted session has
@@ -209,23 +285,40 @@ class ServingRuntime:
                 break
         return self.sessions
 
+    def _run_until_done(self, sid: str, horizon_s: float = INF) -> None:
+        """Advance the clock until session ``sid`` finishes (the
+        ``WorkflowHandle.result`` path) — other sessions keep
+        interleaving normally."""
+        ses = self.sessions[sid]
+        while ses.finished_at < 0 and self.ev:
+            if self.ev.peek_time() > horizon_s:
+                break
+            _, kind, args = self.ev.pop()
+            getattr(self, "_on_" + kind)(*args)
+
     # -- step lifecycle -------------------------------------------------
     def _on_arrival(self, sid: str) -> None:
         ses = self.sessions[sid]
-        req = ses.req
-        tools = [t for _, _, t, _ in req.steps]
-        work_est = sum(len(p) / self.perf.prefill_tokens_per_s
+        inst = ses.inst
+        counts = inst.nominal_rt_counts()
+        tools = [t for _, _, t in counts]
+        work_est = sum(np_ / self.perf.prefill_tokens_per_s
                        + n * self.perf.decode_round_s
-                       for p, n, _, _ in req.steps)
-        self.co.register_task(sid, req.tenant, tools,
+                       for np_, n, _ in counts)
+        aeg = inst.declared_aeg()
+        step_cost = work_est / max(len(counts), 1) \
+            if aeg is not None else 0.0
+        self.co.register_task(sid, inst.tenant, tools,
                               deadline=self.ev.now + 3600.0,
                               work_est_s=work_est, now=self.ev.now,
-                              prefix_tokens=0)
+                              prefix_tokens=0, aeg=aeg,
+                              step_cost_s=step_cost,
+                              entry_node=inst.path[0] if inst.path else 0)
         self._begin_step(sid)
 
     def _begin_step(self, sid: str) -> None:
         ses = self.sessions[sid]
-        prompt = ses.req.steps[ses.step_idx][0]
+        prompt = ses.inst.rt_step(ses.step_idx)[0]
         ses.ctx.extend(int(t) for t in prompt)
         w = self.co.route(sid, self.loads(), self.ev.now)
         self._dispatch_to(sid, w)
@@ -240,7 +333,7 @@ class ServingRuntime:
         ses = self.sessions[sid]
         ses.state = "queued"
         ses.engine = w
-        prio = -self.co.afs.priority(ses.req.tenant)
+        prio = -self.co.afs.priority(ses.inst.tenant)
         if not self.queues[w]:           # empty -> nonempty transition
             self._nonempty.add(w)
             self.co.on_worker_busy(w)
@@ -321,7 +414,7 @@ class ServingRuntime:
             raise RuntimeError(f"engine {w} slot accounting drifted")
         ses.slot = slot
         ses.state = "decode"
-        ses.remaining = int(ses.req.steps[ses.step_idx][1])
+        ses.remaining = int(ses.inst.rt_step(ses.step_idx)[1])
         ses.next_token = int(ses.ctx[-1])
         ses.step_outputs.append([])
         self._active[w].add(sid)
@@ -369,17 +462,22 @@ class ServingRuntime:
         ses = self.sessions[sid]
         w = ses.engine
         eng = self.engines[w]
-        prompt, n_out, tool, gap_s = ses.req.steps[ses.step_idx]
+        prompt, n_out, tool, gap_s = ses.inst.rt_step(ses.step_idx)
         self.co.afs.note_progress(
             sid, len(prompt) / self.perf.prefill_tokens_per_s
             + n_out * self.perf.decode_round_s)
-        if ses.step_idx + 1 >= len(ses.req.steps):
+        # park boundary: resolve the taken edge / dynamic callback (the
+        # callback sees the real decoded token ids).  Deterministic on
+        # the virtual clock; memoized per step index.
+        if ses.inst.resolve_next(ses.step_idx,
+                                 outputs=ses.step_outputs) is None:
             self._finish_task(sid)
             return
         ctx_len = len(ses.ctx)
         entry_bytes = ctx_len * self.kv_bytes_per_token
-        evicted = self.co.on_step_end(sid, w, float(ctx_len), entry_bytes,
-                                      tool, self.ev.now)
+        evicted = self.co.on_step_end(
+            sid, w, float(ctx_len), entry_bytes, tool, self.ev.now,
+            next_node=ses.inst.next_node_hint(ses.step_idx + 1))
         # event-driven WA-LRU reconciliation: only the victims the policy
         # actually picked lose their real blocks (the old server rescanned
         # every cached session per step)
@@ -433,7 +531,7 @@ class ServingRuntime:
         ses = self.sessions[sid]
         if ses.state != "tool":
             return
-        prompt, _, tool, gap_s = ses.req.steps[ses.step_idx]
+        prompt, _, tool, gap_s = ses.inst.rt_step(ses.step_idx)
         self.co.on_tool_done(sid, tool, float(gap_s), float(len(prompt)),
                              self.ev.now)
         ses.step_idx += 1

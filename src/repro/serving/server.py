@@ -53,10 +53,12 @@ class MultiWorkerServer:
         """Execute a whole agent task through the cluster; returns stats.
         Serial: blocks until this task completes (the runtime's clock
         keeps advancing across calls, so TTLs and AFS state carry over)."""
-        ses = self.runtime.submit(req, arrival=self.runtime.ev.now)
+        handle = self.runtime.submit(req, arrival=self.runtime.ev.now)
         self.runtime.run()
-        if ses.finished_at < 0:
-            raise RuntimeError(f"task {req.session_id} did not finish")
+        if not handle.done:
+            raise RuntimeError(
+                f"task {handle.session_id} did not finish")
+        ses = self.runtime.sessions[handle.session_id]
         return {"regen_tokens": float(ses.regen_tokens),
                 "ctx_tokens": float(len(ses.ctx))}
 

@@ -1,0 +1,372 @@
+"""Unified AgentProgram API tests (simulator side, no JAX).
+
+Covers the three program flavors on ``ClusterSim``, the Task adapter's
+byte-identity, branch/retry execution and determinism, the coordinator's
+taken-edge threading, and the workload satellites (O(1) context sums,
+``poisson_arrivals`` zero-rate guard, ``cv_scale`` plumbing)."""
+import os
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import baselines as B
+from repro.cluster.faults import chaos_plan
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import (Step, Task, burstgpt_workload,
+                                    poisson_arrivals,
+                                    swebench_retry_programs,
+                                    swebench_workload,
+                                    webarena_branch_programs,
+                                    webarena_workload)
+from repro.core.coordinator import GlobalCoordinator, SAGAConfig
+from repro.workflow import (AgentProgram, DynamicContext, StepSpec,
+                            as_instance)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+RETRY_NODES = {0: StepSpec("code_execution", 2000, 200, obs_tokens=900),
+               1: StepSpec("file_operations", 300, 150, obs_tokens=500),
+               2: StepSpec("code_execution", 250, 200, obs_tokens=1200),
+               3: StepSpec("database_query", 200, 100, obs_tokens=300)}
+RETRY_EDGES = [(0, 1, 0.97), (1, 2, 0.97), (2, 1, 0.30), (2, 3, 0.67),
+               (3, 1, 0.10)]
+
+
+def _retry_programs(n=12, max_steps=40):
+    return [AgentProgram.graph(f"g{i}", f"t{i % 3}", RETRY_NODES,
+                               RETRY_EDGES, seed=i, arrival_s=i * 2.0,
+                               max_steps=max_steps)
+            for i in range(n)]
+
+
+def _took_retry(path):
+    return any(b <= a for a, b in zip(path, path[1:]))
+
+
+# --- program semantics -------------------------------------------------
+
+def test_scripted_instance_shares_task_steps():
+    task = swebench_workload(n_tasks=2, rate_per_min=4.0, seed=0)[0]
+    inst = as_instance(task)
+    assert inst.steps is task.steps
+    assert inst.context_after(3) == task.context_after(3)
+    assert inst.context_before(3) == task.context_before(3)
+    assert inst.tools() == task.tools()
+    assert inst.resolve_next(0) is task.steps[1]
+    assert inst.resolve_next(task.n_steps - 1) is None
+
+
+def test_graph_path_deterministic_and_memoized():
+    prog = AgentProgram.graph("g", "t", RETRY_NODES, RETRY_EDGES,
+                              seed=3, max_steps=40)
+    a, b = prog.instantiate(), prog.instantiate()
+    for inst in (a, b):
+        i = 0
+        while inst.resolve_next(i) is not None:
+            i += 1
+    assert a.path == b.path
+    # memoized: re-resolving an already-resolved index never re-rolls
+    assert a.resolve_next(0) is a.steps[1]
+
+
+def test_graph_retry_edge_executes():
+    """With p(retry) > 0, some seed in a small pool takes the backward
+    edge — branches execute, they are not just prediction metadata."""
+    paths = []
+    for i in range(12):
+        inst = AgentProgram.graph(f"g{i}", "t", RETRY_NODES, RETRY_EDGES,
+                                  seed=i, max_steps=40).instantiate()
+        j = 0
+        while inst.resolve_next(j) is not None:
+            j += 1
+        paths.append(inst.path)
+    assert any(_took_retry(p) for p in paths)
+    assert all(len(p) <= 40 for p in paths)
+
+
+def test_graph_max_steps_caps_cycles():
+    nodes = {0: StepSpec("web_api", 100, 50)}
+    inst = AgentProgram.graph("loop", "t", nodes, [(0, 0, 1.0)],
+                              max_steps=5).instantiate()
+    i = 0
+    while inst.resolve_next(i) is not None:
+        i += 1
+    assert inst.n_steps == 5
+
+
+def test_graph_validates_edges():
+    with pytest.raises(ValueError):
+        AgentProgram.graph("g", "t", {0: StepSpec("a", 1, 1)},
+                           [(0, 9, 0.5)])
+    with pytest.raises(ValueError):
+        AgentProgram.graph("g", "t", {0: StepSpec("a", 1, 1),
+                                      1: StepSpec("a", 1, 1)},
+                           [(0, 1, 0.8), (0, 0, 0.4)])
+
+
+def test_dynamic_callback_sees_history_and_rng():
+    seen = []
+
+    def cb(ctx: DynamicContext):
+        seen.append((ctx.step_idx, len(ctx.history), ctx.last_tool))
+        assert isinstance(ctx.rng, random.Random)
+        if ctx.step_idx >= 1:
+            return None
+        return StepSpec("web_api", 100, 50, tool_latency_s=0.1)
+
+    inst = AgentProgram.dynamic("d", "t", cb).instantiate()
+    i = 0
+    while inst.resolve_next(i) is not None:
+        i += 1
+    assert inst.n_steps == 2
+    assert seen[0] == (-1, 0, "")          # pre-first-step call
+    assert seen[1][0] == 0 and seen[1][1] == 1
+
+
+# --- simulator execution ----------------------------------------------
+
+def test_branching_program_completes_on_sim():
+    progs = _retry_programs()
+    sim = ClusterSim(progs, B.saga(), n_workers=4, seed=0)
+    sim.run(horizon_s=36000)
+    sim.check_conservation()
+    s = summarize(sim)
+    assert s["n_tasks"] == len(progs)
+    assert any(_took_retry(sim.tasks[p.program_id].path) for p in progs)
+    # executed path length lands in the metrics
+    for p in progs:
+        assert sim.metrics[p.program_id].steps == \
+            len(sim.tasks[p.program_id].path)
+
+
+def test_branching_program_sim_deterministic():
+    runs = []
+    for _ in range(2):
+        sim = ClusterSim(_retry_programs(), B.saga(), n_workers=4, seed=0)
+        sim.run(horizon_s=36000)
+        runs.append((repr(summarize(sim)),
+                     [sim.tasks[f"g{i}"].path for i in range(12)]))
+    assert runs[0] == runs[1]
+
+
+def test_same_spec_same_path_across_instances():
+    """The taken path depends only on (program_id, seed): a simulator
+    instance and a bare re-instantiation resolve identical branches."""
+    progs = _retry_programs(n=6)
+    sim = ClusterSim(progs, B.saga(), n_workers=2, seed=5)
+    sim.run(horizon_s=36000)
+    sim.check_conservation()
+    for p in _retry_programs(n=6):
+        ref = p.instantiate()
+        i = 0
+        while ref.resolve_next(i) is not None:
+            i += 1
+        assert sim.tasks[p.program_id].path == ref.path
+
+
+@pytest.mark.parametrize("routing", ["session", "least", "group",
+                                     "sticky"])
+def test_branching_conservation_under_chaos(routing):
+    """Satellite: branching programs + chaos faults conserve for every
+    routing mode (cancelled/retried steps must not re-roll branches)."""
+    pol = B.saga()
+    pol.routing = routing
+    progs = _retry_programs(n=10, max_steps=30)
+    plan = chaos_plan(4, 400.0, n_events=12, seed=1)
+    sim = ClusterSim(progs, pol, n_workers=4, seed=2, fault_plan=plan)
+    sim.run(horizon_s=72000)
+    sim.check_conservation()
+    assert summarize(sim)["n_tasks"] == 10
+
+
+def test_mixed_tasks_and_programs_one_sim():
+    tasks = swebench_workload(n_tasks=4, rate_per_min=6.0, seed=1)
+    progs = _retry_programs(n=4)
+    sim = ClusterSim(list(tasks) + progs, B.saga(), n_workers=4, seed=0)
+    sim.run(horizon_s=72000)
+    sim.check_conservation()
+    assert summarize(sim)["n_tasks"] == 8
+
+
+def test_dynamic_program_on_sim():
+    def cb(ctx):
+        if ctx.step_idx >= 3:
+            return None
+        tool = "code_execution" if ctx.rng.random() < 0.5 else "web_api"
+        return StepSpec(tool, 200, 100, obs_tokens=400,
+                        tool_latency_s=0.2)
+
+    progs = [AgentProgram.dynamic(f"d{i}", "t0", cb,
+                                  planned_tools=["code_execution"] * 4,
+                                  seed=i, arrival_s=float(i))
+             for i in range(4)]
+    sim = ClusterSim(progs, B.saga(), n_workers=2, seed=0)
+    sim.run(horizon_s=36000)
+    sim.check_conservation()
+    assert summarize(sim)["n_tasks"] == 4
+
+
+def test_generated_branching_mixes_run():
+    progs = swebench_retry_programs(n_programs=6, seed=0) + \
+        webarena_branch_programs(n_programs=6, seed=0)
+    assert len(progs) == 12
+    sim = ClusterSim(progs, B.saga(), n_workers=4, seed=1)
+    sim.run(horizon_s=720000)
+    sim.check_conservation()
+    paths = [sim.tasks[p.program_id].path for p in progs]
+    # the webarena conditional actually branches across the pool
+    web = paths[6:]
+    assert any(1 in p for p in web) or any(4 in p for p in web)
+
+
+# --- coordinator threading --------------------------------------------
+
+def test_coordinator_follows_taken_edge():
+    co = GlobalCoordinator(SAGAConfig(), 2, 1e12)
+    prog = AgentProgram.graph("g", "t", RETRY_NODES, RETRY_EDGES, seed=0)
+    inst = prog.instantiate()
+    co.register_task("g", "t", inst.tools(), 100.0, 10.0, 0.0,
+                     aeg=inst.declared_aeg(), step_cost_s=1.0,
+                     entry_node=0)
+    info = co.sessions["g"]
+    assert info.declared and info.node_id == 0
+    w0 = co.afs.tasks["g"].work_remain_s
+    co.on_step_end("g", 0, 3100.0, 1000.0, "code_execution", 1.0,
+                   next_node=2)
+    assert info.node_id == 2               # the taken edge, not +1
+    # Eq. 9 re-estimate landed from the declared branch structure
+    assert co.afs.tasks["g"].work_remain_s != w0
+    assert co.afs.tasks["g"].work_remain_s == pytest.approx(
+        inst.declared_aeg().work_remaining_steps(2) * 1.0)
+
+
+def test_request_level_baseline_stays_blind():
+    """observability='none' systems must not see a declared graph."""
+    cfg = SAGAConfig(observability="none")
+    co = GlobalCoordinator(cfg, 2, 1e12)
+    inst = AgentProgram.graph("g", "t", RETRY_NODES, RETRY_EDGES,
+                              seed=0).instantiate()
+    co.register_task("g", "t", inst.tools(), 100.0, 10.0, 0.0,
+                     aeg=inst.declared_aeg(), step_cost_s=1.0)
+    assert co.sessions["g"].aeg is None
+    assert not co.sessions["g"].declared
+
+
+def test_declared_aeg_survives_snapshot_roundtrip():
+    """Checkpoint/restart must preserve the declared graph itself —
+    Eq. 9 re-estimation and prefetch targeting run on it after restore
+    (a restored coordinator used to rebuild a fake linear chain)."""
+    co = GlobalCoordinator(SAGAConfig(), 2, 1e12)
+    inst = AgentProgram.graph("s", "t", RETRY_NODES, RETRY_EDGES,
+                              seed=0).instantiate()
+    co.register_task("s", "t", inst.tools(), 100.0, 10.0, 0.0,
+                     aeg=inst.declared_aeg(), step_cost_s=2.5,
+                     entry_node=0)
+    snap = co.snapshot()
+    co2 = GlobalCoordinator(SAGAConfig(), 2, 1e12)
+    co2.restore(snap)
+    info = co2.sessions["s"]
+    assert info.declared and info.step_cost_s == 2.5
+    ref = inst.declared_aeg()
+    assert info.aeg.successors(2) == ref.successors(2)
+    assert info.aeg.work_remaining_steps(1) == \
+        ref.work_remaining_steps(1)
+    # taken-edge advancement + Eq. 9 still work on the restored graph
+    co2.on_step_end("s", 0, 3100.0, 1000.0, "code_execution", 1.0,
+                    next_node=2)
+    assert info.node_id == 2
+
+
+def test_undeclared_snapshot_falls_back_to_hints():
+    co = GlobalCoordinator(SAGAConfig(), 2, 1e12)
+    co.register_task("s", "t", ["a", "b"], 100.0, 10.0, 0.0)
+    snap = co.snapshot()
+    co2 = GlobalCoordinator(SAGAConfig(), 2, 1e12)
+    co2.restore(snap)
+    assert not co2.sessions["s"].declared
+    assert co2.sessions["s"].aeg is not None   # linear-chain fallback
+
+
+# --- workload satellites ----------------------------------------------
+
+def test_poisson_zero_rate_returns_empty():
+    rng = random.Random(0)
+    assert poisson_arrivals(0.0, 600.0, rng) == []
+    assert poisson_arrivals(5.0, 0.0, rng) == []
+    assert poisson_arrivals(-1.0, 600.0, rng) == []
+
+
+def test_burstgpt_zero_load_factor():
+    assert burstgpt_workload(horizon_s=60.0, load_factor=0.0) == []
+
+
+def test_cv_scale_plumbed_through_generators():
+    """cv_scale=0 collapses tool latencies to their medians for every
+    generator (it used to be silently ignored by webarena/burstgpt)."""
+    for gen in (lambda cv: webarena_workload(n_tasks=3, seed=0,
+                                             cv_scale=cv),
+                lambda cv: burstgpt_workload(horizon_s=40.0, seed=0,
+                                             load_factor=0.2,
+                                             cv_scale=cv)):
+        wide = [s.tool_latency_s for t in gen(1.0) for s in t.steps]
+        tight = [s.tool_latency_s for t in gen(0.0) for s in t.steps]
+        assert len(set(round(x, 9) for x in tight)) <= 4  # per-tool medians
+        assert len(set(wide)) > len(set(tight))
+
+
+def test_task_context_cumsum_matches_naive():
+    task = swebench_workload(n_tasks=5, rate_per_min=30.0, seed=2)[0]
+
+    def naive_after(i):
+        ctx = task.prefix_tokens
+        for s in task.steps[:i + 1]:
+            ctx += s.new_prompt_tokens + s.out_tokens + s.obs_tokens
+        return ctx
+
+    def naive_before(i):
+        ctx = task.prefix_tokens
+        for s in task.steps[:i]:
+            ctx += s.new_prompt_tokens + s.out_tokens + s.obs_tokens
+        return ctx + task.steps[i].new_prompt_tokens
+
+    for i in range(task.n_steps):
+        assert task.context_after(i) == naive_after(i)     # bit-exact
+        assert task.context_before(i) == naive_before(i)
+
+    # cache invalidates when the step list grows
+    n = task.n_steps
+    task.steps.append(Step(10.0, 5.0, "web_api", 20.0, 0.1))
+    assert task.context_after(n) == naive_after(n)
+
+
+# --- cross-process byte-identity --------------------------------------
+
+_BRANCH_SNIPPET = """
+from repro.cluster import baselines as B
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import swebench_retry_programs
+progs = swebench_retry_programs(n_programs=8, seed=0)
+sim = ClusterSim(progs, B.saga(), n_workers=4, seed=0)
+sim.run(horizon_s=720000)
+sim.check_conservation()
+print(repr(summarize(sim)))
+print([sim.tasks[p.program_id].path for p in progs])
+"""
+
+
+def test_branching_summary_identical_across_processes():
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run([sys.executable, "-c", _BRANCH_SNIPPET],
+                           env=env, capture_output=True, text=True,
+                           timeout=300)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    assert "tct_mean" in outs[0]

@@ -1,0 +1,92 @@
+"""Golden-equivalence suite: the scripted Task adapter must reproduce
+the PRE-redesign simulator byte-for-byte.
+
+The summary strings below were captured from the simulator BEFORE the
+AgentProgram API landed (commit be4899f: ``ClusterSim`` consumed raw
+``Task`` objects).  Every quantity is pure-Python float arithmetic plus
+one numpy integer division, so the bytes are stable across platforms —
+a mismatch means the adapter path changed scheduling behaviour, which
+breaks the ROADMAP determinism contract.
+
+(The serving runtime's adapter equivalence is covered structurally in
+``tests/test_workflow_runtime.py`` — request-vs-program dual runs — and
+its cross-process identity by ``test_runtime_summary_identical_across_
+processes``.)
+"""
+from repro.cluster import baselines as B
+from repro.cluster.faults import chaos_plan
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import burstgpt_workload, swebench_workload
+
+GOLDEN_SAGA_SWE = (
+    "{'n_tasks': 19, 'tct_mean': 739.0524923335296, 'tct_p50': "
+    "422.7220788048555, 'tct_p99': 4466.624000224905, 'ideal_mean': "
+    "384.6751990812226, 'slo_attainment': 0.7894736842105263, "
+    "'slo_by_tenant': {'tenant0': 0.7894736842105263}, 'mem_util': "
+    "0.2817345680288517, 'regen_time_frac': 0.4008425215716565, "
+    "'throughput_tasks_per_min': 0.2445521413816167, 'cache_hit_rate': "
+    "0.782565130260521, 'migrations_per_task': 0.05263157894736842, "
+    "'evict_rate': 0.20224719101123595, 'regen_tokens_total': "
+    "36348421.0072245}")
+
+GOLDEN_VLLM_SWE = (
+    "{'n_tasks': 19, 'tct_mean': 1290.0062485175908, 'tct_p50': "
+    "914.5125871185885, 'tct_p99': 4883.932462000449, 'ideal_mean': "
+    "384.6751990812226, 'slo_attainment': 0.10526315789473684, "
+    "'slo_by_tenant': {'tenant0': 0.10526315789473684}, 'mem_util': "
+    "0.29475903644317236, 'regen_time_frac': 0.6312115793851865, "
+    "'throughput_tasks_per_min': 0.22445844823434444, 'cache_hit_rate': "
+    "0.0, 'migrations_per_task': 0.0, 'evict_rate': 0.0, "
+    "'regen_tokens_total': 90782212.22184642}")
+
+GOLDEN_SAGA_PATTERN_SWE = (
+    "{'n_tasks': 19, 'tct_mean': 847.7723649591358, 'tct_p50': "
+    "404.77629309050764, 'tct_p99': 4466.857145421547, 'ideal_mean': "
+    "384.6751990812226, 'slo_attainment': 0.6842105263157895, "
+    "'slo_by_tenant': {'tenant0': 0.6842105263157895}, 'mem_util': "
+    "0.31081080743759104, 'regen_time_frac': 0.44915912962008386, "
+    "'throughput_tasks_per_min': 0.24453991092023403, 'cache_hit_rate': "
+    "0.7294589178356713, 'migrations_per_task': 0.05263157894736842, "
+    "'evict_rate': 0.25638406537282943, 'regen_tokens_total': "
+    "44226559.03450646}")
+
+GOLDEN_SAGA_CHAOS_BG = (
+    "{'n_tasks': 38, 'tct_mean': 362.16117997913085, 'tct_p50': "
+    "433.26503111575124, 'tct_p99': 782.5263294843527, 'ideal_mean': "
+    "301.72803218232355, 'slo_attainment': 1.0, 'slo_by_tenant': "
+    "{'light': 1.0, 'heavy': 1.0, 'medium': 1.0}, 'mem_util': "
+    "0.28623766841722176, 'regen_time_frac': 0.06910628896836163, "
+    "'throughput_tasks_per_min': 2.7422168043172155, 'cache_hit_rate': "
+    "0.9359861591695502, 'migrations_per_task': 0.0, 'evict_rate': "
+    "0.040354767184035474, 'regen_tokens_total': 5947291.609522446}")
+
+
+def _swe():
+    return swebench_workload(n_tasks=20, rate_per_min=4.0, seed=0)
+
+
+def _run(tasks, policy, n_workers, seed, plan=None):
+    sim = ClusterSim(tasks, policy, n_workers=n_workers, seed=seed,
+                     fault_plan=plan)
+    sim.run(horizon_s=36000)
+    sim.check_conservation()
+    return repr(summarize(sim))
+
+
+def test_golden_saga_swebench():
+    assert _run(_swe(), B.saga(), 4, 0) == GOLDEN_SAGA_SWE
+
+
+def test_golden_request_level_swebench():
+    assert _run(_swe(), B.vllm(), 4, 0) == GOLDEN_VLLM_SWE
+
+
+def test_golden_pattern_inference_swebench():
+    assert _run(_swe(), B.saga("pattern"), 4, 1) == \
+        GOLDEN_SAGA_PATTERN_SWE
+
+
+def test_golden_saga_chaos_burstgpt():
+    bg = burstgpt_workload(horizon_s=120.0, seed=0, load_factor=0.2)
+    plan = chaos_plan(6, 600.0, n_events=10, seed=2)
+    assert _run(bg, B.saga(), 6, 3, plan) == GOLDEN_SAGA_CHAOS_BG

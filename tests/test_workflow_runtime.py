@@ -1,0 +1,251 @@
+"""AgentProgram API on the real-inference serving runtime: adapter
+byte-identity, branching (retry-edge) execution with delta-only resume,
+dynamic callbacks over real decoded tokens, WorkflowHandle, and
+cross-substrate path identity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.workload import runtime_programs, runtime_requests
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.models import lm
+from repro.serving.runtime import (AgentRequest, ServingRuntime,
+                                   WorkflowHandle)
+from repro.workflow import AgentProgram, StepSpec
+
+load_all()
+CFG = get_config("micro")
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+
+# captured BEFORE the AgentProgram redesign (commit be4899f): the
+# runtime summary depends only on token COUNTS and the virtual clock,
+# never on model output values, so these bytes are platform-stable
+GOLDEN_SAGA_RT = (
+    "{'n_sessions': 5, 'n_done': 5, 'tct_mean': 1.6161618389241164, "
+    "'tct_p50': 0.33992874794463335, 'tct_p99': 4.720808438089012, "
+    "'makespan': 5.501518963220529, 'prefill_tokens': 460, "
+    "'regen_tokens': 323, 'decode_rounds': 20, 'decoded_tokens': 25, "
+    "'cache_hits': 5, 'cache_misses': 5, 'steals': 0, 'migrations': 0, "
+    "'prefetch_issued': 0, 'prefetch_correct': 0, 'prefetch_copies': 0, "
+    "'prefetch_wasted_bytes': 0.0}")
+
+RT_NODES = {0: StepSpec("code_execution", 12, 3, tool_latency_s=0.1),
+            1: StepSpec("file_operations", 8, 2, tool_latency_s=0.05),
+            2: StepSpec("code_execution", 6, 2, tool_latency_s=0.1),
+            3: StepSpec("database_query", 6, 2, tool_latency_s=0.05)}
+RT_EDGES = [(0, 1, 0.97), (1, 2, 0.97), (2, 1, 0.45), (2, 3, 0.52)]
+
+
+def _rt(**kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 256)
+    kw.setdefault("pool_blocks", 96)
+    return ServingRuntime(CFG, PARAMS, seed=0, **kw)
+
+
+def _graph_prog(i, seed=None):
+    return AgentProgram.graph(f"wf{i}", f"t{i % 2}", RT_NODES, RT_EDGES,
+                              seed=i if seed is None else seed,
+                              max_steps=12)
+
+
+def _took_retry(path):
+    return any(b <= a for a, b in zip(path, path[1:]))
+
+
+def test_golden_runtime_summary_unchanged():
+    rt = _rt()
+    for r in runtime_requests(n_sessions=5, vocab=CFG.vocab, seed=4,
+                              n_steps=2, max_ctx=200):
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    assert repr(rt.summarize()) == GOLDEN_SAGA_RT
+
+
+def test_request_vs_scripted_program_byte_identical():
+    """Submitting an AgentRequest and its compiled scripted program must
+    be indistinguishable down to the summary bytes."""
+    reqs = runtime_requests(n_sessions=6, vocab=CFG.vocab, seed=9,
+                            n_steps=3, max_ctx=200)
+    rt_a = _rt()
+    for r in reqs:
+        rt_a.submit(r)
+    rt_a.run()
+    rt_a.check_conservation()
+    rt_b = _rt()
+    for r in reqs:
+        rt_b.submit(AgentProgram.from_request(r))
+    rt_b.run()
+    rt_b.check_conservation()
+    assert repr(rt_a.summarize()) == repr(rt_b.summarize())
+    for r in reqs:
+        assert rt_a.sessions[r.session_id].step_outputs == \
+            rt_b.sessions[r.session_id].step_outputs
+
+
+def test_branching_program_retry_with_delta_resume():
+    """A taken retry edge re-executes its node on the runtime; the
+    resumed steps hit the parked KV and prefill only the delta."""
+    rt = _rt()
+    handles = [rt.submit(_graph_prog(i)) for i in range(6)]
+    rt.run()
+    rt.check_conservation()
+    assert all(h.done for h in handles)
+    retried = [h for h in handles if _took_retry(h.path)]
+    assert retried, "no retry edge taken in the seed pool"
+    s = rt.summarize()
+    assert s["cache_hits"] > 0                    # delta-only resumes
+    assert s["regen_tokens"] < s["prefill_tokens"]
+    for h in handles:                   # one output list per taken step
+        assert len(h.step_outputs) == len(h.path)
+
+
+def test_branching_program_runtime_deterministic():
+    outs = []
+    for _ in range(2):
+        rt = _rt()
+        hs = [rt.submit(_graph_prog(i)) for i in range(6)]
+        rt.run()
+        outs.append((repr(rt.summarize()), [h.path for h in hs],
+                     [h.step_outputs for h in hs]))
+    assert outs[0] == outs[1]
+
+
+def test_same_program_same_path_on_both_substrates():
+    """The acceptance contract: ONE branching spec, identical taken
+    paths on the simulator and the serving runtime (edge draws come
+    from the path stream only, so realization differences — token ids,
+    latencies — never skew the branch structure)."""
+    from repro.cluster import baselines as B
+    from repro.cluster.simulator import ClusterSim
+
+    progs = [_graph_prog(i) for i in range(6)]
+    sim = ClusterSim([_graph_prog(i) for i in range(6)], B.saga(),
+                     n_workers=2, seed=0)
+    sim.run(horizon_s=36000)
+    sim.check_conservation()
+    rt = _rt()
+    handles = [rt.submit(p) for p in progs]
+    rt.run()
+    rt.check_conservation()
+    for p, h in zip(progs, handles):
+        assert sim.tasks[p.program_id].path == h.path
+    assert any(_took_retry(h.path) for h in handles)
+
+
+def test_dynamic_program_decides_from_real_tokens():
+    """The dynamic callback branches on the actual decoded token ids —
+    the tier-b/c path where the client, not a script, drives the
+    workflow."""
+    decisions = []
+
+    def cb(ctx):
+        if ctx.step_idx < 0:
+            return StepSpec("code_execution", prompt_ids=[5, 6, 7, 8],
+                            n_out=2, tool_latency_s=0.05)
+        if ctx.step_idx >= 3:
+            return None
+        last = ctx.outputs[-1][-1]          # real decoded token id
+        tool = "web_api" if last % 2 == 0 else "file_operations"
+        decisions.append(tool)
+        return StepSpec(tool, prompt_ids=[(last % 50) + 1] * 4, n_out=2,
+                        tool_latency_s=0.05)
+
+    rt = _rt()
+    h = rt.submit(AgentProgram.dynamic("dyn0", "t0", cb,
+                                       planned_tools=["code_execution"]))
+    outs = h.result()
+    rt.check_conservation()
+    assert h.done and len(outs) == 4
+    assert len(decisions) == 3
+    # replay: identical model + seed -> identical decisions
+    decisions2 = []
+
+    def cb2(ctx):
+        if ctx.step_idx < 0:
+            return StepSpec("code_execution", prompt_ids=[5, 6, 7, 8],
+                            n_out=2, tool_latency_s=0.05)
+        if ctx.step_idx >= 3:
+            return None
+        last = ctx.outputs[-1][-1]
+        tool = "web_api" if last % 2 == 0 else "file_operations"
+        decisions2.append(tool)
+        return StepSpec(tool, prompt_ids=[(last % 50) + 1] * 4, n_out=2,
+                        tool_latency_s=0.05)
+
+    rt2 = _rt()
+    h2 = rt2.submit(AgentProgram.dynamic("dyn0", "t0", cb2,
+                                         planned_tools=["code_execution"]))
+    assert h2.result() == outs
+    assert decisions2 == decisions
+
+
+def test_workflow_handle_api():
+    rt = _rt()
+    h = rt.submit(_graph_prog(0))
+    assert isinstance(h, WorkflowHandle)
+    assert h.status == "new" and not h.done
+    with pytest.raises(RuntimeError):
+        _ = h.tct
+    outs = h.result()
+    assert h.done and h.status == "done"
+    assert h.tct >= 0.0
+    assert outs == h.step_outputs and len(outs) == len(h.path)
+
+
+def test_generated_runtime_programs_conserve():
+    rt = _rt(n_slots=3, pool_blocks=128)
+    handles = [rt.submit(p) for p in runtime_programs(n_sessions=6,
+                                                      seed=1)]
+    rt.run()
+    rt.check_conservation()
+    rt.verify_pool_mirrors()
+    assert all(h.done for h in handles)
+
+
+def test_program_too_big_for_engine_rejected():
+    big = AgentProgram.graph(
+        "big", "t", {0: StepSpec("web_api", 4000, 8)}, [], max_steps=4)
+    rt = _rt()
+    with pytest.raises(ValueError):
+        rt.submit(big)
+
+
+def test_context_cap_truncation_is_flagged():
+    """A graph that outgrows the engine context ends early with
+    ``truncated=True`` (the taken path is a prefix of the unconstrained
+    one, so cross-substrate path identity is explicitly off)."""
+    nodes = {0: StepSpec("web_api", 40, 8, tool_latency_s=0.05)}
+    loop = AgentProgram.graph("looper", "t", nodes, [(0, 0, 1.0)],
+                              max_steps=30)
+    rt = _rt()
+    h = rt.submit(loop)
+    h.result()
+    rt.check_conservation()
+    assert h.done and h.truncated
+    assert len(h.path) < 30
+    unconstrained = loop.instantiate()
+    i = 0
+    while unconstrained.resolve_next(i) is not None:
+        i += 1
+    assert unconstrained.path[:len(h.path)] == h.path  # strict prefix
+
+
+def test_cluster_task_runs_on_runtime():
+    """A cluster-sim Task submits to the runtime: token ids are realized
+    from the adapter's seed, oversized tails truncate (flagged) instead
+    of crashing mid-event-loop."""
+    from repro.cluster.workload import Step, Task
+    steps = [Step(12.0, 3.0, "code_execution", 6.0, 0.1),
+             Step(8.0, 2.0, "file_operations", 4.0, 0.05),
+             Step(2000.0, 40.0, "web_api", 10.0, 0.05)]  # won't fit
+    task = Task("clu-task", "t0", "swebench", 0.0, steps,
+                prefix_tokens=0.0)
+    rt = _rt()
+    h = rt.submit(task)
+    outs = h.result()
+    rt.check_conservation()
+    assert h.done and h.truncated and len(outs) == 2
