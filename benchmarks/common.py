@@ -127,3 +127,18 @@ def save_json(name: str, payload) -> None:
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1,
                                                      default=str))
+
+
+EXPECTED = Path(__file__).resolve().parent / "expected"
+
+
+def save_fingerprint(name: str, text: str) -> Path:
+    """Write a smoke run's deterministic summary bytes to
+    ``benchmarks/results/<name>_fingerprint.txt``.  CI diffs this
+    against the committed twin in ``benchmarks/expected/`` so a
+    determinism break surfaces as a readable unified diff of summary
+    dicts, not just a nonzero exit."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}_fingerprint.txt"
+    p.write_text(text if text.endswith("\n") else text + "\n")
+    return p

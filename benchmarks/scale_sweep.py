@@ -43,7 +43,7 @@ from repro.cluster.simulator import ClusterSim, StepJob, StepQueue, \
 from repro.cluster.workload import Task, scale_workload
 from repro.core.afs import AFSScheduler
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, save_fingerprint, save_json
 
 
 class LegacySortQueue:
@@ -420,7 +420,9 @@ def smoke() -> None:
         outs.append(r.stdout)
     assert outs[0] == outs[1], "cross-process summaries diverged"
     assert a + "\n" == outs[0], "parent/child summaries diverged"
+    save_fingerprint("scale_sweep", a)
     ab = bench_epoch_ab(64, repeats=1)
+    save_json("scale_sweep_smoke", {"epoch_ab": ab})
     print(f"smoke ok: conservation + determinism green, "
           f"epoch-tick speedup {ab['speedup']:.2f}x at 64 workers")
 

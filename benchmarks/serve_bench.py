@@ -20,9 +20,21 @@ costs one compile set; its regeneration is the engine-counter delta.
     PYTHONPATH=src:. python benchmarks/serve_bench.py           # full
     PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke   # CI gate
 
-The smoke gate additionally asserts byte-identical SAGA summaries for
-two identical-seed runs in-process AND across processes with different
-PYTHONHASHSEED (the runtime's determinism contract).
+The smoke gate additionally asserts:
+
+  * **chaos mode** — the same SAGA run under a ``cluster.faults``
+    chaos plan (engine fail/recover/scale-up mid-decode, cancellation
+    through the attempt-stamped registry): conservation + zero slot/KV
+    leak must hold on real engines, same as the simulator;
+  * **preemption A/B** — a two-tenant starvation scenario where
+    SAGA-with-preemption must preempt at least one running decode and
+    show strictly lower max AFS deviation (Thm. 2) than admission-only
+    ordering;
+  * byte-identical SAGA summaries (clean + chaos + preemption) for two
+    identical-seed runs in-process AND across processes with different
+    PYTHONHASHSEED (the runtime's determinism contract), with the
+    fingerprint written to ``benchmarks/results/`` for CI to diff
+    against the committed ``benchmarks/expected/`` twin.
 
 CSV rows follow the house format: ``name,us_per_call,derived``.
 """
@@ -39,14 +51,17 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 import jax
+import numpy as np
 
+from repro.cluster.faults import chaos_plan
 from repro.cluster.workload import runtime_requests
 from repro.configs import get_config, load_all
 from repro.core.coordinator import SAGAConfig
 from repro.models import lm
-from repro.serving.runtime import RuntimePerf, ServingRuntime
+from repro.serving.runtime import (AgentRequest, RuntimePerf,
+                                   ServingRuntime)
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, save_fingerprint, save_json
 
 N_WORKERS = 2
 N_SLOTS = 6
@@ -151,26 +166,122 @@ def run_ab(smoke: bool) -> dict:
     return out
 
 
+def run_chaos(cfg, params) -> dict:
+    """Chaos mode: the full SAGA stack under an engine fail / recover /
+    scale-up plan on real engines.  Conservation (admitted == finished,
+    zero slot/KV-block leak) is asserted inside ``run_policy`` via
+    ``check_conservation``, exactly like the simulator's gate."""
+    reqs = _sessions(smoke=True)
+    rt = ServingRuntime(cfg, params, n_workers=N_WORKERS, saga=SAGAConfig(),
+                        n_slots=N_SLOTS, max_len=MAX_LEN,
+                        pool_blocks=POOL_BLOCKS, seed=SEED, perf=PERF,
+                        fault_plan=chaos_plan(N_WORKERS, 30.0,
+                                              n_events=12, seed=1))
+    for r in reqs:
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()      # raises on ANY unfinished session or
+    rt.verify_pool_mirrors()     # slot/KV-block leak
+    s = rt.summarize()
+    if s["faults_injected"] < 1:
+        raise AssertionError("chaos plan injected no engine failures")
+    return s
+
+
+def _starvation_runtimes(cfg, params, preempt: bool) -> ServingRuntime:
+    """Two hog decodes hold the only engine's two slots; a
+    higher-aggregate-demand burst of short sessions then arrives."""
+    saga = SAGAConfig(enable_preemption=preempt)
+    rt = ServingRuntime(cfg, params, n_workers=1, saga=saga, n_slots=2,
+                        max_len=MAX_LEN, pool_blocks=POOL_BLOCKS,
+                        seed=SEED, perf=RuntimePerf())
+    rng = np.random.RandomState(3)
+    for i in range(2):
+        rt.submit(AgentRequest(
+            f"hog{i}", "hogT",
+            [(list(map(int, rng.randint(1, cfg.vocab, 8))), 150,
+              "code_execution", 0.05)]))
+    for i in range(8):
+        rt.submit(AgentRequest(
+            f"st{i}", "stT",
+            [(list(map(int, rng.randint(1, cfg.vocab, 6))), 40,
+              "web_api", 0.05)], arrival_s=0.2))
+    rt.run()
+    rt.check_conservation()
+    return rt
+
+
+def run_preemption_ab(cfg, params) -> dict:
+    """AFS preemption gate: with preemption ON, running decodes are
+    parked for the starved tenant and the max fair-share deviation
+    (Thm. 2) must be strictly below admission-only ordering."""
+    base = _starvation_runtimes(cfg, params, preempt=False)
+    pre = _starvation_runtimes(cfg, params, preempt=True)
+    if base.preempted != 0:
+        raise AssertionError("admission-only run preempted")
+    if pre.preempted < 1:
+        raise AssertionError("preemption never fired in starvation mix")
+    if not pre.afs_dev_max < base.afs_dev_max:
+        raise AssertionError(
+            f"preemption did not tighten AFS deviation: "
+            f"{pre.afs_dev_max} vs admission-only {base.afs_dev_max}")
+    return {
+        "afs_dev_admission": base.afs_dev_max,
+        "afs_dev_preempt": pre.afs_dev_max,
+        "dev_reduction_x": base.afs_dev_max / pre.afs_dev_max,
+        "preemptions": pre.preempted,
+        "preempt_summary": pre.summarize(),
+        "admission_summary": base.summarize(),
+    }
+
+
 def _fingerprint() -> str:
-    """Deterministic SAGA-run summary (fresh engines, fixed seed): the
-    byte-identity contract compared across runs and processes.  Reduced
-    size (8 sessions, 2 steps) so the smoke gate can afford to run it
-    three times — the contract is about replay, not scale."""
+    """Deterministic SAGA-run summaries (fresh engines, fixed seed): the
+    byte-identity contract compared across runs and processes, covering
+    the clean, chaos, and preemption paths.  Reduced sizes so the smoke
+    gate can afford to run it three times — the contract is about
+    replay, not scale."""
     load_all()
     cfg = get_config("micro")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     reqs = runtime_requests(n_sessions=8, vocab=cfg.vocab, seed=SEED,
                             n_steps=2, max_ctx=MAX_LEN - 32)
     rt, _ = run_policy(cfg, params, SAGAConfig(), reqs)
-    return repr(rt.summarize())
+    lines = ["clean " + repr(rt.summarize())]
+    chaos_reqs = runtime_requests(n_sessions=6, vocab=cfg.vocab,
+                                  seed=SEED, n_steps=2,
+                                  max_ctx=MAX_LEN - 32)
+    crt = ServingRuntime(cfg, params, n_workers=N_WORKERS,
+                         saga=SAGAConfig(enable_preemption=True),
+                         n_slots=2, max_len=MAX_LEN,
+                         pool_blocks=POOL_BLOCKS, seed=SEED, perf=PERF,
+                         fault_plan=chaos_plan(N_WORKERS, 10.0,
+                                               n_events=8, seed=1))
+    for r in chaos_reqs:
+        crt.submit(r)
+    crt.run()
+    crt.check_conservation()
+    lines.append("chaos+preempt " + repr(crt.summarize()))
+    return "\n".join(lines)
 
 
 def smoke() -> None:
     """CI gate: 16 concurrent sessions over 2 engines on real forward
-    passes — SAGA strictly below request-level regeneration,
-    conservation clean, and byte-identical identical-seed summaries
-    in-process and across PYTHONHASHSEED."""
+    passes — SAGA strictly below request-level regeneration; chaos-mode
+    conservation + zero slot/KV leak under engine faults; preemption
+    strictly tightening max AFS deviation vs admission-only; and
+    byte-identical identical-seed summaries (clean + chaos + preempt)
+    in-process and across PYTHONHASHSEED, with the fingerprint saved
+    for CI's readable-diff step."""
+    load_all()
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
     out = run_ab(smoke=True)
+    chaos = run_chaos(cfg, params)
+    pre = run_preemption_ab(cfg, params)
+    out["chaos"] = chaos
+    out["preemption"] = pre
+    save_json("serve_bench_smoke", out)
     a = _fingerprint()
     assert a == _fingerprint(), "same-process summaries diverged"
     outs = []
@@ -184,10 +295,17 @@ def smoke() -> None:
         outs.append(r.stdout)
     assert outs[0] == outs[1], "cross-process summaries diverged"
     assert a + "\n" == outs[0], "parent/child summaries diverged"
+    save_fingerprint("serve_bench", a)
     print(f"smoke ok: {out['n_sessions']} sessions / {out['n_engines']} "
           f"engines, regen {out['saga']['regen_tokens']} vs "
           f"{out['reqlevel']['regen_tokens']} "
-          f"({out['regen_reduction_x']:.2f}x), determinism green")
+          f"({out['regen_reduction_x']:.2f}x); chaos "
+          f"faults={chaos['faults_injected']} "
+          f"cancelled={chaos['cancelled_attempts']} conservation green; "
+          f"preemption dev {pre['afs_dev_preempt']:.3f} vs "
+          f"{pre['afs_dev_admission']:.3f} "
+          f"({pre['dev_reduction_x']:.2f}x, {pre['preemptions']} parks); "
+          f"determinism green")
 
 
 def main() -> None:

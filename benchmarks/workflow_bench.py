@@ -39,7 +39,7 @@ from repro.cluster.simulator import ClusterSim, summarize
 from repro.cluster.workload import (swebench_retry_programs,
                                     webarena_branch_programs)
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, save_fingerprint, save_json
 
 SEED = 0
 
@@ -124,6 +124,8 @@ def smoke() -> None:
         outs.append(r.stdout)
     assert outs[0] == outs[1], "cross-process summaries diverged"
     assert a + "\n" == outs[0], "parent/child summaries diverged"
+    save_fingerprint("workflow_bench", a)
+    save_json("workflow_bench_smoke", out)
     print(f"smoke ok: {out['n_programs']} branching programs, "
           f"{out['retry_edges_taken']} retry edges taken, regen "
           f"reduction {out['regen_reduction_x']:.2f}x, determinism "

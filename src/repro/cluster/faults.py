@@ -1,6 +1,11 @@
-"""Fault-tolerance & elasticity scenarios for the cluster simulator.
+"""Fault-tolerance & elasticity scenarios, shared across BOTH execution
+substrates: plans are plain ``(t_seconds, kind, worker)`` triples
+consumed by ``ClusterSim(fault_plan=...)`` (discrete-event simulator)
+and ``ServingRuntime(fault_plan=...)`` (real-inference runtime, where a
+"worker" is an ``Engine`` and a fail cancels in-flight attempts through
+the attempt-stamped registry, reclaims slot KV, and releases real pool
+blocks):
 
-Produces fault plans consumed by ``ClusterSim(fault_plan=...)``:
   ("fail", w)     worker w dies: queue requeued, KV lost, affinity dropped
   ("recover", w)  worker returns empty-cached
   ("scale_up", 0) elastic scale-out: a fresh worker joins
@@ -10,6 +15,9 @@ Produces fault plans consumed by ``ClusterSim(fault_plan=...)``:
 Also provides straggler injection (a slow worker = reduced rates), which
 exercises the paper's own mitigation (work stealing, §5.2), and
 preemption storms (spot-reclamation-style simultaneous mass kills).
+Both substrates keep their conservation invariants (admitted ==
+finished, zero slot/KV leak) and byte-identical identical-seed replay
+under every plan here.
 """
 from __future__ import annotations
 

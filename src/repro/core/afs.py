@@ -189,6 +189,18 @@ class AFSScheduler:
             if np is not None:
                 self._dirty.add(task_id)
 
+    def refund_work(self, task_id: str, work_s: float) -> None:
+        """Return previously-charged progress to a task's Eq. 9
+        work-remaining estimate: a fault cancelled the step mid-attempt,
+        so the partial progress noted when the preemption parked it is
+        un-done — the retried step re-runs in full and its priority must
+        reflect that.  Same dirty-row protocol as ``note_progress``."""
+        t = self.tasks.get(task_id)
+        if t and work_s > 0.0:
+            t.work_remain_s += work_s
+            if np is not None:
+                self._dirty.add(task_id)
+
     # -- Eq. 8 -------------------------------------------------------------
     def _accumulate(self, now: float) -> Dict[str, float]:
         """Per-tenant AFS numerators in tenant first-seen order."""
@@ -264,6 +276,15 @@ class AFSScheduler:
         return t.afs if t else 0.0
 
     # -- preemption (§6.2 step 4) ------------------------------------------
+    def deficit(self, blocked_tenant: str, running_tenant: str) -> float:
+        """Fair-share deficit of a blocked tenant against a running one:
+        the AFS-priority gap Eq. 8 says the allocator owes the blocked
+        side.  The serving runtime preempts a running decode only when
+        this exceeds its configured threshold (plus the blocked-time
+        hysteresis in ``should_preempt``), so marginal inversions never
+        thrash the decode batch."""
+        return self.priority(blocked_tenant) - self.priority(running_tenant)
+
     def note_blocked(self, task_id: str, now: float) -> None:
         t = self.tasks.get(task_id)
         if t and t.blocked_since is None:

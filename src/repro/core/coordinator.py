@@ -58,6 +58,14 @@ class SAGAConfig:
     # AFS (§6)
     epoch_s: float = 0.100
     preempt_block_s: float = 0.500
+    # AFS preemption of RUNNING decodes (§6.2 step 4, serving runtime):
+    # a queued session whose tenant's fair-share deficit against a
+    # running victim exceeds ``preempt_deficit`` for longer than
+    # ``preempt_block_s`` parks the victim at the next batched-decode
+    # round boundary.  Off by default: admission-only ordering is the
+    # pre-preemption behaviour every golden byte-pin was captured under.
+    enable_preemption: bool = False
+    preempt_deficit: float = 0.0
     # observability tier: hints | pattern | none
     observability: str = "hints"
     # cache policy: walru | lru | prefix | none (no cross-request reuse,
@@ -377,16 +385,38 @@ class GlobalCoordinator:
                     session_id,
                     info.aeg.work_remaining_steps(info.node_id)
                     * info.step_cost_s)
+        evicted = self._insert_ttl_entry(session_id, worker, ctx_tokens,
+                                         entry_bytes, next_tool, now,
+                                         info.node_id if info else 0)
+        pool = self.pools[worker]
+        if info is not None and self.cfg.enable_prefetch:
+            # declared graphs prefetch the RESOLVED next node (the taken
+            # edge, known at this park boundary) instead of speculating
+            # on the argmax successor
+            target = info.node_id if info.declared else None
+            self.prefetcher.maybe_issue(session_id, info.aeg, info.node_id,
+                                        entry_bytes, now,
+                                        pool.utilization(), target=target,
+                                        worker=worker)
+        return evicted
+
+    def _insert_ttl_entry(self, session_id: str, worker: int,
+                          ctx_tokens: float, entry_bytes: float,
+                          tool: str, now: float,
+                          node_id: int) -> List[CacheEntry]:
+        """Insert/replace a session's pool entry with a tool-aware TTL
+        and reconcile every aggregate (bytes total, sites index) — the
+        shared tail of ``on_step_end`` and ``preempt_park``, factored so
+        the accounting ``check_conservation`` guards lives once."""
         pool = self.pools[worker]
         m = memory_pressure(pool.utilization(), self.cfg.th_low,
                             self.cfg.th_high)
         deadline = None
         if self.cfg.enable_ttl:
-            deadline = self.ttl.deadline(next_tool, now, m)
+            deadline = self.ttl.deadline(tool, now, m)
         entry = CacheEntry(session_id=session_id, size_bytes=entry_bytes,
                            t_last=now, tokens=ctx_tokens,
-                           node_id=info.node_id if info else 0,
-                           ttl_deadline=deadline)
+                           node_id=node_id, ttl_deadline=deadline)
         used_before = pool.used
         evicted = pool.insert(entry, now)
         self.pools_used += pool.used - used_before
@@ -396,15 +426,28 @@ class GlobalCoordinator:
             self._site_add(session_id, worker)
         else:            # replaced-but-didn't-fit: old entry is gone too
             self._site_discard(session_id, worker)
-        if info is not None and self.cfg.enable_prefetch:
-            # declared graphs prefetch the RESOLVED next node (the taken
-            # edge, known at this park boundary) instead of speculating
-            # on the argmax successor
-            target = info.node_id if info.declared else None
-            self.prefetcher.maybe_issue(session_id, info.aeg, info.node_id,
-                                        entry_bytes, now,
-                                        pool.utilization(), target=target)
         return evicted
+
+    def preempt_park(self, session_id: str, worker: int,
+                     ctx_tokens: float, entry_bytes: float,
+                     now: float) -> List[CacheEntry]:
+        """AFS preemption parked a RUNNING decode mid-step (§6.2): the
+        victim's slot KV moves to the pool so a starved session can take
+        the slot, and it resumes later with a delta-only prefill.  Like
+        ``on_step_end`` this unpins and inserts a TTL-stamped entry, but
+        the step is NOT over: the AEG cursor does not advance, tool
+        stats see nothing, and no prefetch is speculated (the session
+        is going back on the queue, not into a tool gap).  TTL uses the
+        tool the session is between — preemption must not demote its
+        survival odds below a same-aged tool park (§3.1: predictions
+        survive preemption).  Returns evicted entries so the caller can
+        free the victims' real blocks."""
+        self.unpin(session_id, worker)
+        info = self.sessions.get(session_id)
+        return self._insert_ttl_entry(
+            session_id, worker, ctx_tokens, entry_bytes,
+            info.cur_tool if info is not None else "unknown", now,
+            info.node_id if info else 0)
 
     def on_tool_done(self, session_id: str, tool: str, latency_s: float,
                      obs_tokens: float, now: float) -> None:
@@ -502,6 +545,11 @@ class GlobalCoordinator:
             self._site_discard(sid, worker)
         self.pools[worker] = self._make_pool()
         dropped = self.router.evict_worker(worker)
+        # NOTE: in-flight prefetch jobs are NOT cancelled here — on the
+        # simulator they model background regenerations that run wherever
+        # the next step lands, so they survive the source's death.  The
+        # serving runtime, whose jobs are real block copies sourced from
+        # the dead engine, calls ``prefetcher.cancel_worker`` itself.
         # dead workers leave the indexed idle set: an empty queue on a
         # corpse must not accrue steal credit
         self.stealer.note_queue_state(worker, False, 0.0)

@@ -22,6 +22,7 @@ class PrefetchJob:
     issued_at: float
     ready_at: float           # completion time under bandwidth model
     correct: Optional[bool] = None   # filled when the real next step lands
+    worker: Optional[int] = None     # copy source (engine fault cleanup)
 
 
 class SpeculativePrefetcher:
@@ -37,12 +38,15 @@ class SpeculativePrefetcher:
     def maybe_issue(self, session_id: str, aeg: Optional[AEG],
                     node_id: int, entry_bytes: float, now: float,
                     pool_used_frac: float,
-                    target: Optional[int] = None) -> Optional[PrefetchJob]:
+                    target: Optional[int] = None,
+                    worker: Optional[int] = None) -> Optional[PrefetchJob]:
         """Issue a prefetch for the argmax successor if spare memory
         exists.  ``target`` overrides the successor prediction with an
         already-resolved node (declared graphs: the taken edge is known
         at the park boundary, so the prefetch is exact, not
-        speculative).  Returns the job (simulator schedules ready_at)."""
+        speculative).  ``worker`` records the copy's source engine so a
+        fault there can cancel the job.  Returns the job (simulator
+        schedules ready_at)."""
         if aeg is None or pool_used_frac > 1.0 - self.spare:
             return None
         succ = target if target is not None \
@@ -57,7 +61,8 @@ class SpeculativePrefetcher:
             self.wasted_bytes += prev.bytes_
         job = PrefetchJob(session_id=session_id, node_id=succ,
                           bytes_=entry_bytes, issued_at=now,
-                          ready_at=now + entry_bytes / self.bw)
+                          ready_at=now + entry_bytes / self.bw,
+                          worker=worker)
         self.inflight[session_id] = job
         self.issued += 1
         return job
@@ -68,6 +73,19 @@ class SpeculativePrefetcher:
         job = self.inflight.pop(session_id, None)
         if job is not None:
             self.wasted_bytes += job.bytes_
+
+    def cancel_worker(self, worker: int) -> int:
+        """An engine died: every in-flight replication sourced from it
+        can never land (its parked blocks are gone), so the jobs are
+        cancelled and their bytes counted as waste — previously only
+        supersession cancelled them, and a dead-source job would linger
+        until ``resolve`` mis-scored it against the wrong copy.  Returns
+        the number of jobs cancelled."""
+        victims = [sid for sid, job in self.inflight.items()
+                   if job.worker == worker]
+        for sid in victims:
+            self.wasted_bytes += self.inflight.pop(sid).bytes_
+        return len(victims)
 
     def resolve(self, session_id: str, actual_node: int,
                 now: float) -> bool:

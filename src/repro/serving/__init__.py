@@ -32,4 +32,39 @@ Architecture map (module -> paper section):
     ``step_outputs`` / ``status`` / taken ``path``).
   * ``server.MultiWorkerServer`` — legacy blocking facade: a thin
     serial wrapper over the runtime.
+
+Fault / preemption lifecycle (runtime twin of the simulator's
+attempt-stamped registry; ``cluster.faults`` plans drive both
+substrates)::
+
+              route                prefill_done             step done
+   [queued] --------> [prefill] ---------------> [decode] -----------+
+      ^  ^   admit        |    (attempt-stamped)   |  |              |
+      |  |                | fail: attempt          |  | fail:        v
+      |  |                | cancelled, ctx         |  | rollback   [tool]
+      |  |                | rolled back,           |  | + retry      |
+      |  |                v re-dispatch            |  v              |
+      |  |           (re-route / orphan <----------+ orphan if       |
+      |  |            buffer if no engine alive;     all dead)       |
+      |  |            recover / scale_up readmits)                   |
+      |  |                                         epoch tick:       |
+      |  |   AFS preemption (deficit > threshold,  decide victim     |
+      |  |   blocked > preempt_block_s, Thm. 2     at round          |
+      |  |   under/over-served check)              boundary          |
+      |  +--------------------------------- [decode victim parked:   |
+      |      re-enqueued mid-step (delta-    slot KV -> pool, TTL    |
+      |      only resume finishes the step   entry, starved head     |
+      |      token-for-token identically)    admitted]               |
+      +--------------------------------------------------------------+
+                     tool_done -> next step (resume hits pool KV,
+                     or regenerates from the last parked prefix if a
+                     fault / eviction took it — §3.1)
+
+   Engine ``fail`` wipes slots + block tables + coordinator pool
+   metadata + affinities, cancels in-flight prefetch copies sourced
+   there (counted as waste), refunds partially-charged AFS work, and
+   requeues the pending queue on live engines.  ``check_conservation``
+   asserts admitted == finished and zero slot/KV-block leak after every
+   run, chaos plans included — and identical-seed runs stay
+   byte-identical across ``PYTHONHASHSEED`` under all of it.
 """

@@ -228,6 +228,21 @@ class Engine:
     def evict_session(self, sid: str) -> None:
         self.pool.free_session(sid)
 
+    def fail(self) -> List[str]:
+        """Engine crash: every decode slot and every parked session is
+        lost at once.  Clears the slot table and the block tables (the
+        device arrays stay allocated — new sessions overwrite them, and
+        an empty slot/table means no decode or resume can read stale
+        KV).  Returns the session ids whose state was held here, sorted,
+        so the runtime can cancel their in-flight attempts."""
+        lost = {s.session_id for s in self.slots
+                if s.session_id is not None}
+        lost.update(self.pool.tables)
+        self.slots = [SlotState() for _ in range(self.n_slots)]
+        for sid in list(self.pool.tables):
+            self.pool.free_session(sid)
+        return sorted(lost)
+
     def has_cache(self, sid: str) -> bool:
         return self.pool.has(sid)
 

@@ -93,6 +93,25 @@ class SessionQueue:
         self._live -= 1
         return heapq.heappop(h)[3]
 
+    def peek(self):
+        """Highest-priority live item without removing it (the AFS
+        preemption trigger inspects the blocked head).  Compacts dead
+        heap heads as a side effect, like ``pop``."""
+        h = self._heap
+        while h and getattr(h[0][3], "cancelled", False):
+            heapq.heappop(h)
+        return h[0][3] if h else None
+
+    def drain(self) -> List["object"]:
+        """Remove and return every live item in heap (priority) order —
+        the engine-failure requeue path."""
+        items = []
+        while True:
+            item = self.pop()
+            if item is None:
+                return items
+            items.append(item)
+
     def remove(self, session_id: str):
         """Tombstone and return the queued item for ``session_id`` (the
         steal path), or None."""

@@ -36,19 +36,44 @@ tiny zoo models on CPU, same code on TPU pods) under the same
     likely overflow target so the resume still hits cache.  Copies are
     real block transfers that overlap the (virtual-time) tool gap.
 
+Fault tolerance and preemption (the simulator's lifecycle, on real
+engines):
+
+  * **Engine fault injection** — ``cluster.faults`` plans (chaos /
+    straggler / preemption storms; ("fail"|"recover"|"scale_up"|"slow"|
+    "heal", worker) events) drive the runtime through virtual-time
+    events.  Every admitted step lives in an attempt-stamped in-flight
+    registry; a ``fail`` cancels the dead engine's attempts (stale
+    ``prefill_done``/``round`` events are dropped by attempt/generation
+    stamps), reclaims slot KV, releases pool blocks, refunds partially-
+    charged AFS work, and re-dispatches each session to a live engine,
+    which regenerates from its last parked prefix (§3.1).  If every
+    engine is down, sessions park in an orphan buffer until a recover /
+    scale-up.
+  * **AFS preemption of running decodes** (§6.2) — admission ordering
+    alone cannot enforce Theorem 2's bounded deviation once a victim
+    holds a slot, so when a queued session's fair-share deficit against
+    the lowest-priority running decode exceeds ``preempt_deficit`` for
+    longer than ``preempt_block_s`` (hysteresis), the victim is parked
+    at the next batched-decode round boundary: slot KV exported to the
+    pool with a TTL entry, the starved session admitted, and the victim
+    later resumed with a delta-only prefill mid-step — token-for-token
+    identical to an unpreempted run while the parked copy survives.
+
 Time is virtual (``repro.serving.events.EventLoop``): tool gaps cost
 nothing on the wall clock, and identical-seed runs produce byte-identical
 ``summarize()`` output even across processes with different
-``PYTHONHASHSEED`` — the same determinism contract as the simulator.
-Real compute (prefill, decode, KV copies) runs eagerly as its event is
-processed.
+``PYTHONHASHSEED`` — the same determinism contract as the simulator,
+preserved under fault plans and preemption.  Real compute (prefill,
+decode, KV copies) runs eagerly as its event is processed.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import random
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -111,6 +136,15 @@ class SessionState:
     regen_tokens: int = 0
     finished_at: float = -1.0
     step_outputs: List[List[int]] = dataclasses.field(default_factory=list)
+    # fault/preemption lifecycle: the ctx length at step start (prompt
+    # included) so a cancelled attempt can roll the decoded tail back,
+    # whether the session is mid-step (preempted: remaining survives the
+    # park), and the AFS progress already charged for the current step
+    # (refunded if a fault forces a full retry)
+    attempt: int = -1
+    step_start_len: int = 0
+    mid_step: bool = False
+    work_charged: float = 0.0
 
     @property
     def tct(self) -> float:
@@ -195,8 +229,12 @@ class ServingRuntime:
                  saga: Optional[SAGAConfig] = None, n_slots: int = 4,
                  max_len: int = 512, pool_blocks: int = 48,
                  perf: Optional[RuntimePerf] = None, seed: int = 0,
-                 engines: Optional[List[Engine]] = None):
+                 engines: Optional[List[Engine]] = None,
+                 fault_plan: Optional[Sequence[Tuple[float, str,
+                                                     int]]] = None,
+                 straggler_slowdown: float = 4.0):
         self.cfg = cfg
+        self.params = params
         self.engines = engines if engines is not None else [
             Engine(cfg, params, n_slots=n_slots, max_len=max_len,
                    pool_blocks=pool_blocks) for _ in range(n_workers)]
@@ -229,10 +267,36 @@ class ServingRuntime:
         self._alive = [True] * self.n_workers
         self._epoch_live = False
         self.migrating: Dict[str, Tuple[int, int]] = {}
+        # fault-correct lifecycle (the simulator's registry, runtime
+        # twin): sid -> (engine, attempt) for every admitted step; the
+        # matching prefill_done event carries the attempt and a mismatch
+        # at delivery means a fault cancelled the step in the meantime.
+        # Round events are generation-stamped per engine the same way.
+        self.inflight: Dict[str, Tuple[int, int]] = {}
+        self._attempt = itertools.count()
+        self._gen = [0] * self.n_workers
+        self._slow: Dict[int, float] = {}
+        self.straggler_slowdown = straggler_slowdown
+        self._orphans: List[str] = []
+        self.fault_plan = list(fault_plan or [])
+        for t, kind, w in self.fault_plan:
+            self.ev.schedule(t, "fault", (kind, w))
+        # AFS preemption of running decodes (§6.2): decided at the epoch
+        # tick, executed at the next round boundary.  Thm. 2 deviation is
+        # measured against constant workload-proportional fair rates
+        # (mu_i ∝ W_i, the lyapunov_v convention), so per-tenant
+        # submitted work is accumulated at registration.
+        self._preempt_pending: Dict[int, str] = {}
+        self._last_preempt = [-INF] * self.n_workers
+        self._tenant_workload: Dict[str, float] = {}
         # instrumentation
         self.migrations = 0
         self.prefetch_copies = 0
         self.prefetch_copy_bytes = 0.0
+        self.faults_injected = 0
+        self.cancelled_attempts = 0
+        self.preempted = 0
+        self.afs_dev_max = 0.0
         for w in range(self.n_workers):
             self.co.on_worker_idle(w, 0.0)
 
@@ -306,6 +370,8 @@ class ServingRuntime:
                        + n * self.perf.decode_round_s
                        for np_, n, _ in counts)
         aeg = inst.declared_aeg()
+        self._tenant_workload[inst.tenant] = \
+            self._tenant_workload.get(inst.tenant, 0.0) + work_est
         step_cost = work_est / max(len(counts), 1) \
             if aeg is not None else 0.0
         self.co.register_task(sid, inst.tenant, tools,
@@ -320,11 +386,33 @@ class ServingRuntime:
         ses = self.sessions[sid]
         prompt = ses.inst.rt_step(ses.step_idx)[0]
         ses.ctx.extend(int(t) for t in prompt)
+        ses.step_start_len = len(ses.ctx)
+        self._redispatch(sid)
+
+    def _redispatch(self, sid: str) -> None:
+        """Route to a live engine, or park in the orphan buffer when the
+        whole cluster is down (readmitted on the next recover/scale-up,
+        same as the simulator)."""
+        if not any(self._alive):
+            self.sessions[sid].state = "queued"
+            self._orphans.append(sid)
+            return
         w = self.co.route(sid, self.loads(), self.ev.now)
         self._dispatch_to(sid, w)
 
+    def _readmit_orphans(self) -> None:
+        orphans, self._orphans = self._orphans, []
+        for sid in orphans:
+            self._redispatch(sid)
+        if orphans and not self._epoch_live \
+                and self.n_done < len(self.sessions):
+            self._epoch_live = True
+            self.ev.schedule(self.ev.now + self.perf.epoch_s, "epoch")
+
     def _dispatch_to(self, sid: str, w: int) -> None:
-        if self._resident[w] < self.n_slots and not self.queues[w]:
+        if not self._alive[w]:
+            self._redispatch(sid)
+        elif self._resident[w] < self.n_slots and not self.queues[w]:
             self._admit(sid, w)
         else:
             self._enqueue(sid, w)
@@ -339,6 +427,7 @@ class ServingRuntime:
             self.co.on_worker_busy(w)
         self.queues[w].push(prio, self.ev.now, _QueueTicket(sid))
         self._load_delta(w, 1)
+        self.co.afs.note_blocked(sid, self.ev.now)
 
     def _queue_pop(self, w: int) -> Optional[SessionState]:
         ticket = self.queues[w].pop()
@@ -363,6 +452,8 @@ class ServingRuntime:
         self.co.on_worker_idle(w, self.ev.now)
 
     def _drain_queue(self, w: int) -> None:
+        if not self._alive[w]:
+            return
         while self.queues[w] and self._resident[w] < self.n_slots:
             ses = self._queue_pop(w)
             if ses is not None:
@@ -379,6 +470,7 @@ class ServingRuntime:
         ses = self.sessions[sid]
         eng = self.engines[w]
         ctx_len = len(ses.ctx)
+        self.co.afs.note_unblocked(sid)
         hit, pf_tokens, bg_tokens = self.co.on_step_start(
             sid, w, float(ctx_len), self.ev.now)
         real_hit = hit and eng.has_cache(sid)
@@ -399,13 +491,27 @@ class ServingRuntime:
         ses.engine = w
         ses.slot = -1                        # assigned at prefill_done
         ses.cached_hit = real_hit
+        ses.attempt = next(self._attempt)
+        self.inflight[sid] = (w, ses.attempt)
         self._resident[w] += 1
         self._load_delta(w, 1)
-        done = self.ev.now + max(0.0, virt_prefill) \
+        pf_s = max(0.0, virt_prefill) * self._speed_factor(w) \
             / self.perf.prefill_tokens_per_s
-        self.ev.schedule(done, "prefill_done", (sid,))
+        # service accrues as GPU time is actually consumed (prefill here,
+        # decode per round) so Thm. 2 deviation sees starvation while it
+        # is happening, not at completion granularity
+        self.co.afs.note_service(ses.inst.tenant, pf_s)
+        self.ev.schedule(self.ev.now + pf_s, "prefill_done",
+                         (sid, ses.attempt))
 
-    def _on_prefill_done(self, sid: str) -> None:
+    def _speed_factor(self, w: int) -> float:
+        """Straggler slowdown factor for engine ``w`` (>1 = slow)."""
+        return self._slow.get(w, 1.0)
+
+    def _on_prefill_done(self, sid: str, attempt: int = -1) -> None:
+        rec = self.inflight.get(sid)
+        if rec is None or rec[1] != attempt:
+            return       # stale: the attempt was cancelled by a fault
         ses = self.sessions[sid]
         w = ses.engine
         slot = self.engines[w].start_session(
@@ -414,21 +520,36 @@ class ServingRuntime:
             raise RuntimeError(f"engine {w} slot accounting drifted")
         ses.slot = slot
         ses.state = "decode"
-        ses.remaining = int(ses.inst.rt_step(ses.step_idx)[1])
+        if ses.mid_step:
+            # resuming a preempted decode: ``remaining`` tokens of the
+            # interrupted step are still owed; its partial output list
+            # is already in place
+            ses.mid_step = False
+        else:
+            ses.remaining = int(ses.inst.rt_step(ses.step_idx)[1])
+            ses.step_outputs.append([])
         ses.next_token = int(ses.ctx[-1])
-        ses.step_outputs.append([])
         self._active[w].add(sid)
         if not self._round_live[w]:
             self._round_live[w] = True
-            self.ev.schedule(self.ev.now + self.perf.decode_round_s,
-                             "round", (w,))
+            self.ev.schedule(
+                self.ev.now
+                + self.perf.decode_round_s * self._speed_factor(w),
+                "round", (w, self._gen[w]))
 
-    def _on_round(self, w: int) -> None:
+    def _on_round(self, w: int, gen: int = 0) -> None:
         """One continuous-batching decode round: every decode-phase
         session on engine ``w`` advances one token in a single batched
         forward pass.  Sessions whose step completed leave the batch
         (their slot frees, the queue drains into it) while the rest keep
-        decoding — no barrier between sessions."""
+        decoding — no barrier between sessions.  ``gen`` stamps the
+        engine incarnation: a round scheduled before a failure must not
+        touch the recovered engine's fresh batch.  The round boundary is
+        also where a pending AFS preemption parks its victim — never
+        mid-forward-pass, so the decode batch stays internally
+        consistent."""
+        if gen != self._gen[w]:
+            return                   # stale: engine died since scheduling
         active = sorted(self._active[w],
                         key=lambda s: self.sessions[s].slot)
         if not active:
@@ -438,6 +559,7 @@ class ServingRuntime:
         slot_tokens = {self.sessions[s].slot: self.sessions[s].next_token
                        for s in active}
         out = eng.decode(slot_tokens, n_steps=1)
+        round_s = self.perf.decode_round_s * self._speed_factor(w)
         finished: List[str] = []
         for sid in active:
             ses = self.sessions[sid]
@@ -446,26 +568,42 @@ class ServingRuntime:
             ses.step_outputs[-1].append(tok)
             ses.next_token = tok
             ses.remaining -= 1
+            self.co.afs.note_service(ses.inst.tenant, round_s)
             if ses.remaining == 0:
                 finished.append(sid)
         for sid in finished:
             self._active[w].discard(sid)
             self._finish_decode(sid)
+        victim = self._preempt_pending.pop(w, None)
+        if victim is not None and victim in self._active[w]:
+            self._preempt_now(victim, w)
         if self._active[w]:
-            self.ev.schedule(self.ev.now + self.perf.decode_round_s,
-                             "round", (w,))
+            self.ev.schedule(
+                self.ev.now
+                + self.perf.decode_round_s * self._speed_factor(w),
+                "round", (w, self._gen[w]))
         else:
             self._round_live[w] = False
         self._drain_queue(w)
+
+    def _step_work_s(self, prompt_len: int, n_out: int) -> float:
+        """Nominal GPU-seconds of one step (Eq. 9 granularity): virtual
+        prefill + one decode round per token.  Straggler factors are
+        deliberately excluded so AFS charges demand, not slowness."""
+        return prompt_len / self.perf.prefill_tokens_per_s \
+            + n_out * self.perf.decode_round_s
 
     def _finish_decode(self, sid: str) -> None:
         ses = self.sessions[sid]
         w = ses.engine
         eng = self.engines[w]
+        self.inflight.pop(sid, None)
         prompt, n_out, tool, gap_s = ses.inst.rt_step(ses.step_idx)
-        self.co.afs.note_progress(
-            sid, len(prompt) / self.perf.prefill_tokens_per_s
-            + n_out * self.perf.decode_round_s)
+        work = self._step_work_s(len(prompt), n_out)
+        # a preemption park part-charged this step already; charge only
+        # the tail so the step's total AFS progress is exact
+        self.co.afs.note_progress(sid, max(0.0, work - ses.work_charged))
+        ses.work_charged = 0.0
         # park boundary: resolve the taken edge / dynamic callback (the
         # callback sees the real decoded token ids).  Deterministic on
         # the virtual clock; memoized per step index.
@@ -511,9 +649,58 @@ class ServingRuntime:
             eng.evict_session(victim.session_id)
         return eng.park_session(sid)
 
+    def _preempt_now(self, sid: str, w: int) -> None:
+        """Execute a pending AFS preemption at the round boundary: park
+        the victim's slot KV into the pool mid-step (TTL entry via
+        ``preempt_park`` — the AEG cursor does not advance) and requeue
+        it AFS-ordered behind the starved session, which the round's
+        trailing ``_drain_queue`` admits into the freed slot.  The
+        victim resumes later with a delta-only prefill and finishes the
+        interrupted step token-for-token identically."""
+        ses = self.sessions[sid]
+        eng = self.engines[w]
+        self._active[w].discard(sid)
+        self.inflight.pop(sid, None)
+        # charge the executed part of the step now (prompt prefill +
+        # decoded rounds); _finish_decode later charges only the tail
+        prompt = ses.inst.rt_step(ses.step_idx)[0]
+        decoded = len(ses.ctx) - ses.step_start_len
+        done_work = self._step_work_s(len(prompt), decoded)
+        self.co.afs.note_progress(
+            sid, max(0.0, done_work - ses.work_charged))
+        ses.work_charged = done_work
+        ctx_len = len(ses.ctx)
+        evicted = self.co.preempt_park(
+            sid, w, float(ctx_len), ctx_len * self.kv_bytes_per_token,
+            self.ev.now)
+        for evd in evicted:
+            eng.evict_session(evd.session_id)
+        if self.co.pools[w].contains(sid):
+            if not self._park_real(sid, w):
+                self.co.drop_entry(sid, w, count_eviction=False)
+                eng.release_session(sid)
+        else:
+            eng.release_session(sid)
+        ses.slot = -1
+        ses.mid_step = True
+        self._resident[w] -= 1
+        self._load_delta(w, -1)
+        self.preempted += 1
+        self._last_preempt[w] = self.ev.now
+        # admit the starved queue head into the freed slot FIRST, then
+        # requeue the victim behind it — queue priorities are stamped at
+        # push time, so re-enqueueing the victim before the admission
+        # could let a stale (pre-recompute) priority re-admit the victim
+        # straight back into the slot it was just parked from
+        starved = self._queue_pop(w)
+        self._enqueue(sid, w)
+        if starved is not None:
+            self._admit(starved.session_id, w)
+
     def _finish_task(self, sid: str) -> None:
         ses = self.sessions[sid]
         w = ses.engine
+        self.inflight.pop(sid, None)
         self.engines[w].release_session(sid)
         ses.slot = -1
         self._resident[w] -= 1
@@ -537,14 +724,15 @@ class ServingRuntime:
         ses.step_idx += 1
         self._begin_step(sid)
 
-    # -- epoch tick: AFS shares + work stealing -------------------------
+    # -- epoch tick: AFS shares + work stealing + preemption ------------
     def _on_epoch(self) -> None:
-        decision, _ = self.co.epoch_tick(
+        decision, shares = self.co.epoch_tick(
             self.ev.now, self.loads(), self._queue_views,
             alive=self._alive, victim_candidates=self._nonempty,
             scan_queues=False)
         if decision is not None and self.co.stealer.accept(
-                decision, len(self.queues[decision.victim]), self.ev.now):
+                decision, len(self.queues[decision.victim]), self.ev.now,
+                thief_alive=self._alive[decision.thief]):
             ses = self._queue_remove(decision.victim, decision.session_id)
             if ses is not None:
                 ses.state = "migrating"
@@ -555,10 +743,92 @@ class ServingRuntime:
                 self.ev.schedule(self.ev.now + mig, "migr_done",
                                  (ses.session_id, decision.victim,
                                   decision.thief))
+        if self.co.cfg.enable_preemption:
+            self._preempt_scan()
+        if shares:
+            self._note_afs_deviation()
         if self.n_done < len(self.sessions):
-            self.ev.schedule(self.ev.now + self.perf.epoch_s, "epoch")
+            if any(self._alive) or self.ev:
+                self.ev.schedule(self.ev.now + self.perf.epoch_s, "epoch")
+            else:
+                # whole cluster dead and nothing scheduled could revive
+                # it: stop ticking so run() returns and conservation
+                # reports the stranded sessions (simulator semantics)
+                self._epoch_live = False
         else:
             self._epoch_live = False
+
+    def _fair_targets(self) -> Optional[List[Tuple[str, float, float]]]:
+        """(tenant, service_s, fair_target_s) rows under the Thm. 2
+        convention: each tenant's fair target is its share of TOTAL
+        submitted workload (mu_i ∝ W_i, constant — ``lyapunov_v``'s
+        weights) scaled by the service actually delivered so far, so
+        targets track realized throughput and converge to W_i exactly
+        when everything completes."""
+        w_tot = sum(self._tenant_workload.values())
+        if w_tot <= 0.0:
+            return None
+        tens = self.co.afs.tenants
+        tot = sum(t.service_s for t in tens.values())
+        if tot <= 0.0:
+            return None
+        return [(name, tens[name].service_s if name in tens else 0.0,
+                 w / w_tot * tot)
+                for name, w in sorted(self._tenant_workload.items())]
+
+    def _preempt_scan(self) -> None:
+        """§6.2 step 4 on the serving path: for every engine whose slots
+        are full while sessions queue, preempt the lowest-priority
+        running decode iff (a) the queue head's fair-share deficit
+        exceeds the configured threshold, (b) it has been blocked longer
+        than ``preempt_block_s``, and (c) the blocked tenant is actually
+        UNDER-served and the victim OVER-served against their
+        workload-proportional fair targets — (c) is the Thm. 2
+        restoring-force condition and the anti-flap hysteresis: once
+        service ratios cross their fair rates, preemption stops instead
+        of starving the former hog in turn.  A per-engine cooldown of
+        ``preempt_block_s`` adds rate-limiting.  The decision is made
+        here; the park happens at the engine's next round boundary."""
+        cfg = self.co.cfg
+        now = self.ev.now
+        targets = self._fair_targets()
+        lag = {name: tgt - srv
+               for name, srv, tgt in (targets or ())}
+        for w in sorted(self._nonempty):
+            if not self._alive[w] or w in self._preempt_pending:
+                continue
+            if self._resident[w] < self.n_slots or not self._active[w]:
+                continue
+            if now - self._last_preempt[w] < cfg.preempt_block_s:
+                continue
+            head = self.queues[w].peek()
+            if head is None:
+                continue
+            blocked = head.session_id
+            b_ten = self.sessions[blocked].inst.tenant
+            victim = min(self._active[w], key=lambda s: (
+                self.co.afs.priority(self.sessions[s].inst.tenant), s))
+            v_ten = self.sessions[victim].inst.tenant
+            if self.co.afs.deficit(b_ten, v_ten) <= cfg.preempt_deficit:
+                continue
+            if targets is not None and not (lag.get(b_ten, 0.0) > 0.0
+                                            and lag.get(v_ten, 0.0) < 0.0):
+                continue
+            if not self.co.afs.should_preempt(blocked, victim, now):
+                continue
+            self._preempt_pending[w] = victim
+
+    def _note_afs_deviation(self) -> None:
+        """Track the max fair-share deviation max_i |S_i - mu_i| under
+        the workload-proportional Thm. 2 targets.  Preemption should
+        keep this strictly tighter than admission-only ordering — the
+        serve-bench preemption gate asserts exactly that."""
+        targets = self._fair_targets()
+        if targets is None or len(targets) < 2:
+            return
+        dev = max(abs(srv - tgt) for _, srv, tgt in targets)
+        if dev > self.afs_dev_max:
+            self.afs_dev_max = dev
 
     def _copy_kv(self, sid: str, src: int, dst: int) -> bool:
         """Real pool-to-pool block copy (export, make room, import)."""
@@ -583,6 +853,12 @@ class ServingRuntime:
             return
         ses = self.sessions[sid]
         if ses.state != "migrating":
+            return
+        if not self._alive[dst]:
+            # thief died while the KV was in transit: drop the copy and
+            # re-route to a live engine (the home entry, if the source
+            # survives, is still intact for a later resume)
+            self._redispatch(sid)
             return
         if self.engines[src].has_cache(sid):
             if self._copy_kv(sid, src, dst):
@@ -613,11 +889,18 @@ class ServingRuntime:
             return
         if sid not in self.co.prefetcher.inflight:
             return                            # superseded or resolved
+        if not self._alive[src]:
+            return                            # source died mid-gap
         loads = self.loads()
         if float(loads[src]) < self.co.cfg.theta:
             return                            # home will take the resume
         masked = loads.astype(float).copy()
         masked[src] = INF
+        for i, alive in enumerate(self._alive):
+            if not alive:                     # a dead engine's zero load
+                masked[i] = INF               # must not attract replicas
+        if not math.isfinite(float(masked.min())):
+            return
         dst = int(masked.argmin())
         if dst == src or not self.engines[src].has_cache(sid):
             return
@@ -633,6 +916,115 @@ class ServingRuntime:
                 len(ses.ctx) * self.kv_bytes_per_token
         else:
             self.co.drop_entry(sid, dst, count_eviction=False)
+
+    # -- faults / elasticity (cluster.faults plans, runtime twin) -------
+    def _on_fault(self, kind: str, w: int) -> None:
+        """One ``cluster.faults`` plan event on the virtual clock.  The
+        same plans drive both substrates: (t, "fail"|"recover"|
+        "scale_up"|"slow"|"heal", worker)."""
+        if kind == "fail":
+            self._fail_engine(w)
+        elif kind == "recover":
+            self._recover_engine(w)
+        elif kind == "scale_up":
+            self._scale_up()
+        elif kind == "slow":
+            self._slow[w] = self.straggler_slowdown
+        elif kind == "heal":
+            self._slow.pop(w, None)
+        else:
+            raise ValueError(f"unknown fault event {kind!r}")
+
+    def _fail_engine(self, w: int) -> None:
+        """Engine dies mid-decode: cancel its in-flight attempts via the
+        attempt-stamped registry (stale prefill_done/round events no
+        longer match), reclaim slots, release pool blocks, requeue its
+        pending queue on live engines, and wipe policy state
+        (coordinator pool metadata, affinities, idle-set membership).
+        Cancelled sessions retry from their last parked prefix —
+        regenerating if the prefix died with this engine (§3.1)."""
+        if w >= self.n_workers or not self._alive[w]:
+            return                           # already down
+        self._alive[w] = False
+        self.faults_injected += 1
+        self._gen[w] += 1                    # invalidate pending rounds
+        self._round_live[w] = False
+        self._preempt_pending.pop(w, None)
+        self.co.worker_failed(w)
+        # real replication copies sourced from the dead pool die with it
+        self.co.prefetcher.cancel_worker(w)
+        self.engines[w].fail()
+        tickets = self.queues[w].drain()
+        if tickets:
+            self._load_delta(w, -len(tickets))
+            self._queue_went_empty(w)
+        victims = sorted(sid for sid, (ew, _) in self.inflight.items()
+                         if ew == w)
+        for sid in victims:
+            self._cancel_attempt(sid, w)
+        if self._resident[w] != 0:
+            raise RuntimeError(
+                f"engine {w} lifecycle leak at failure: "
+                f"resident={self._resident[w]}")
+        for t in tickets:
+            self._redispatch(t.session_id)
+
+    def _cancel_attempt(self, sid: str, w: int) -> None:
+        """Cancel one in-flight step attempt on a dead engine: roll the
+        context back to the step start (the decoded tail's KV died with
+        the slots), refund any partially-charged AFS progress so the
+        full retry is owed again, and re-dispatch."""
+        ses = self.sessions[sid]
+        del self.inflight[sid]
+        self.cancelled_attempts += 1
+        self._active[w].discard(sid)
+        # decode rounds that executed before the crash were real service
+        # and stay charged (per-round note_service already saw them —
+        # sim semantics: work lost to a crash was still work), but any
+        # partially-charged Eq. 9 progress is refunded: the retry runs
+        # the whole step again
+        if ses.work_charged > 0.0:
+            self.co.afs.refund_work(sid, ses.work_charged)
+            ses.work_charged = 0.0
+        del ses.ctx[ses.step_start_len:]
+        if len(ses.step_outputs) > ses.step_idx:
+            ses.step_outputs.pop()
+        ses.mid_step = False
+        ses.slot = -1
+        self._resident[w] -= 1
+        self._load_delta(w, -1)
+        self._redispatch(sid)
+
+    def _recover_engine(self, w: int) -> None:
+        if w >= self.n_workers or self._alive[w]:
+            return                           # already up (storm overlap)
+        self._alive[w] = True
+        self.co.worker_recovered(w, self.ev.now)
+        self._readmit_orphans()
+
+    def _scale_up(self) -> None:
+        """Elastic scale-out: a fresh engine joins, sharing the zoo
+        model's jitted functions (module ``_JIT_CACHE``) so joining
+        costs no recompilation."""
+        ref = self.engines[0]
+        eng = Engine(self.cfg, self.params, n_slots=ref.n_slots,
+                     max_len=ref.max_len,
+                     pool_blocks=ref.pool.num_blocks,
+                     block_size=ref.pool.block, env=ref.env)
+        self.engines.append(eng)
+        w = self.co.add_worker(self.ev.now)
+        self.queues.append(SessionQueue())
+        self._queue_views.append(
+            _RuntimeQueueView(lambda w=w: self.queues[w]))
+        self._active.append(set())
+        self._resident.append(0)
+        self._round_live.append(False)
+        self._gen.append(0)
+        self._loadnum = np.append(self._loadnum, 0)
+        self._alive.append(True)
+        self._last_preempt.append(-INF)
+        self.n_workers += 1
+        self._readmit_orphans()
 
     # -- reporting ------------------------------------------------------
     def stats(self) -> dict:
@@ -651,7 +1043,7 @@ class ServingRuntime:
         tcts = sorted(s.tct for s in done)
         n = len(tcts)
         st = self.stats()
-        return {
+        out = {
             "n_sessions": len(self.sessions),
             "n_done": n,
             "tct_mean": float(sum(tcts) / n) if n else 0.0,
@@ -673,6 +1065,15 @@ class ServingRuntime:
             "prefetch_copies": int(self.prefetch_copies),
             "prefetch_wasted_bytes": float(self.co.prefetcher.wasted_bytes),
         }
+        if self.fault_plan or self.co.cfg.enable_preemption:
+            # fault/preemption keys only when those modes are active, so
+            # every pre-existing golden byte-pin of the default summary
+            # stays valid
+            out["faults_injected"] = int(self.faults_injected)
+            out["cancelled_attempts"] = int(self.cancelled_attempts)
+            out["preemptions"] = int(self.preempted)
+            out["afs_dev_max"] = float(self.afs_dev_max)
+        return out
 
     # -- invariants -----------------------------------------------------
     def check_conservation(self) -> None:
@@ -691,6 +1092,15 @@ class ServingRuntime:
             bad.append(f"n_done={self.n_done} != {len(self.sessions)}")
         if self.migrating:
             bad.append(f"migrations in limbo: {sorted(self.migrating)[:5]}")
+        if self.inflight:
+            bad.append(f"attempts still in flight: "
+                       f"{sorted(self.inflight)[:5]}")
+        if self._orphans:
+            bad.append(f"orphaned sessions never re-admitted: "
+                       f"{sorted(self._orphans)[:5]}")
+        if self._preempt_pending:
+            bad.append(f"preemptions never executed: "
+                       f"{sorted(self._preempt_pending.items())[:5]}")
         for w, eng in enumerate(self.engines):
             if self.queues[w]:
                 bad.append(f"engine {w} queue not drained")

@@ -5,6 +5,36 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
+def _pallas_interpret_unavailable():
+    """Probe the Pallas interpret path this whole suite depends on.
+    Some toolchains (CPU-only runners with older wheels, new Python
+    versions before Pallas catches up) cannot execute kernel bodies at
+    all — in that case the suite self-skips through pytest's own skip
+    machinery with the probe's reason, instead of CI ignoring the file
+    wholesale and silently dropping coverage where it WOULD run."""
+    try:
+        from jax.experimental import pallas as pl
+
+        def k(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        x = jnp.arange(8, dtype=jnp.float32)
+        out = pl.pallas_call(
+            k, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x)
+        if float(out[1]) != 2.0:
+            return "pallas interpret mode produced a wrong result"
+        return None
+    except Exception as e:          # pragma: no cover - env dependent
+        return f"pallas interpret mode unavailable: " \
+               f"{type(e).__name__}: {e}"
+
+
+_SKIP_REASON = _pallas_interpret_unavailable()
+if _SKIP_REASON:                    # pragma: no cover - env dependent
+    pytest.skip(_SKIP_REASON, allow_module_level=True)
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

@@ -1,0 +1,318 @@
+"""Fault-tolerant serving runtime: engine fault injection through the
+attempt-stamped in-flight registry (cancellation, orphan buffer,
+scale-out) and AFS preemption of running decodes (mid-step park with
+delta-only resume), with the simulator's conservation and determinism
+contracts upheld on real engines."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.cluster.faults import (chaos_plan, preemption_storm_plan,
+                                  straggler_plan)
+from repro.cluster.workload import runtime_requests
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.core.prefetch import SpeculativePrefetcher
+from repro.core.aeg import AEG
+from repro.models import lm
+from repro.serving.runtime import AgentRequest, ServingRuntime
+
+load_all()
+CFG = get_config("micro")
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _rt(saga=None, fault_plan=None, **kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 256)
+    kw.setdefault("pool_blocks", 96)
+    return ServingRuntime(CFG, PARAMS, seed=0, saga=saga,
+                          fault_plan=fault_plan, **kw)
+
+
+def _trace_reqs(n=8, seed=4, n_steps=3):
+    return runtime_requests(n_sessions=n, vocab=CFG.vocab, seed=seed,
+                            n_steps=n_steps, max_ctx=200)
+
+
+def _steps(rng, n_prompt, n_out, tool="code_execution", gap=0.05,
+           n_steps=1):
+    return [(list(map(int, rng.randint(1, CFG.vocab, n_prompt))), n_out,
+             tool, gap) for _ in range(n_steps)]
+
+
+# -- engine fault injection ---------------------------------------------
+
+def test_chaos_conservation_on_real_engines():
+    """The CI-facing property: under a randomized fail/recover/scale-up
+    plan, every session still finishes and no slot, block, queue entry,
+    or in-flight attempt leaks — the simulator's conservation contract
+    on actual engines."""
+    rt = _rt(fault_plan=chaos_plan(2, 8.0, n_events=10, seed=1))
+    for r in _trace_reqs():
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    rt.verify_pool_mirrors()
+    s = rt.summarize()
+    assert s["n_done"] == 8
+    assert s["faults_injected"] >= 1
+    # chaos costs regeneration vs the same run without faults
+    clean = _rt()
+    for r in _trace_reqs():
+        clean.submit(r)
+    clean.run()
+    clean.check_conservation()
+    assert s["regen_tokens"] > clean.summarize()["regen_tokens"]
+
+
+def test_storm_and_straggler_plans_drive_runtime():
+    """The simulator's other fault plans are reused verbatim on the
+    serving substrate."""
+    for plan in (preemption_storm_plan(2, 8.0, n_storms=2,
+                                       downtime_s=1.0, seed=2),
+                 straggler_plan(2, 8.0, n_stragglers=1, slow_for_s=2.0,
+                                seed=3)):
+        rt = _rt(fault_plan=plan)
+        for r in _trace_reqs(n=6):
+            rt.submit(r)
+        rt.run()
+        rt.check_conservation()
+        assert rt.n_done == 6
+
+
+def test_straggler_slows_virtual_service():
+    """A slow engine's decode rounds dilate on the virtual clock, so a
+    permanently-slowed single-engine run must finish strictly later."""
+    rng = np.random.RandomState(0)
+    reqs = _steps(rng, 8, 40)
+    fast = _rt(n_workers=1)
+    fast.submit(AgentRequest("a", "t0", list(reqs)))
+    fast.run()
+    slow = _rt(n_workers=1, fault_plan=[(0.0, "slow", 0)])
+    slow.submit(AgentRequest("a", "t0", list(reqs)))
+    slow.run()
+    slow.check_conservation()
+    assert slow.sessions["a"].tct > fast.sessions["a"].tct * 2.0
+
+
+def test_fail_cancels_inflight_attempt_and_retries_identically():
+    """Kill the only engine mid-decode: the attempt is cancelled via the
+    registry (the stale prefill_done/round events are dropped), the
+    context rolls back to the step start, the session parks in the
+    orphan buffer, and after recovery the retried step re-prefills the
+    same prompt — so its outputs are token-for-token identical to a
+    fault-free run."""
+    rng = np.random.RandomState(1)
+    steps = _steps(rng, 8, 40)
+    clean = _rt(n_workers=1)
+    clean.submit(AgentRequest("a", "t0", list(steps)))
+    clean.run()
+
+    rt = _rt(n_workers=1,
+             fault_plan=[(0.5, "fail", 0), (0.8, "recover", 0)])
+    rt.submit(AgentRequest("a", "t0", list(steps)))
+    rt.run()
+    rt.check_conservation()
+    s = rt.summarize()
+    assert s["cancelled_attempts"] == 1 and s["faults_injected"] == 1
+    assert rt.sessions["a"].step_outputs == clean.sessions["a"].step_outputs
+    assert len(rt.sessions["a"].step_outputs[0]) == 40
+    # the retry regenerated (fresh prefill of the same prompt)
+    assert s["regen_tokens"] > clean.summarize()["regen_tokens"]
+    assert rt.sessions["a"].tct > clean.sessions["a"].tct
+
+
+def test_all_engines_dead_strands_sessions_visibly():
+    """With every engine down and nothing scheduled to revive one, the
+    run must terminate (no infinite epoch ticking) and conservation must
+    report the stranded sessions rather than pass silently."""
+    rt = _rt(fault_plan=[(0.01, "fail", 0), (0.01, "fail", 1)])
+    rng = np.random.RandomState(2)
+    rt.submit(AgentRequest("a", "t0", _steps(rng, 8, 4)))
+    rt.run()
+    assert rt.n_done == 0
+    try:
+        rt.check_conservation()
+    except RuntimeError as e:
+        assert "never finished" in str(e)
+    else:
+        raise AssertionError("conservation passed on a stranded session")
+
+
+def test_orphans_readmitted_on_recover_and_scale_up():
+    """Kill both engines mid-run; sessions orphan, then a recover and an
+    elastic scale-up each readmit them.  Everything finishes and the new
+    engine participates."""
+    plan = [(0.2, "fail", 0), (0.2, "fail", 1),
+            (0.6, "recover", 0), (0.9, "scale_up", 0)]
+    rt = _rt(fault_plan=plan)
+    for r in _trace_reqs(n=6):
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    assert rt.n_done == 6
+    assert rt.n_workers == 3 and len(rt.engines) == 3
+    assert rt.summarize()["faults_injected"] == 2
+
+
+def test_prefetch_jobs_cancelled_when_source_engine_dies():
+    """An in-flight replication sourced from a dead engine can never
+    land: it must be cancelled and its bytes counted as waste (only
+    supersession used to cancel jobs)."""
+    p = SpeculativePrefetcher(bandwidth_Bps=1e9)
+    aeg = AEG.linear_chain(["code_execution", "web_api"])
+    assert p.maybe_issue("s0", aeg, 0, 100.0, 0.0, 0.0,
+                         worker=0) is not None
+    assert p.maybe_issue("s1", aeg, 0, 40.0, 0.0, 0.0,
+                         worker=1) is not None
+    assert p.cancel_worker(1) == 1
+    assert p.wasted_bytes == 40.0
+    assert "s1" not in p.inflight and "s0" in p.inflight
+    assert p.cancel_worker(1) == 0           # idempotent
+    # runtime path: a fail event cancels the coordinator's jobs too
+    rt = _rt(fault_plan=[(0.05, "fail", 0), (0.3, "recover", 0)])
+    for r in _trace_reqs(n=6):
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+
+
+# -- AFS preemption of running decodes ----------------------------------
+
+def _starvation_runtime(preempt, deficit=0.0):
+    """One engine / two slots; a hog tenant's two long decodes occupy
+    both slots before a starved tenant's higher-aggregate-demand burst
+    arrives."""
+    saga = SAGAConfig(enable_preemption=preempt, preempt_deficit=deficit)
+    rt = _rt(n_workers=1, saga=saga)
+    rng = np.random.RandomState(3)
+    hog_steps = [_steps(rng, 8, 150) for _ in range(2)]
+    st_steps = [_steps(rng, 6, 40, tool="web_api") for _ in range(8)]
+    for i, st in enumerate(hog_steps):
+        rt.submit(AgentRequest(f"hog{i}", "hogT", st))
+    for i, st in enumerate(st_steps):
+        rt.submit(AgentRequest(f"st{i}", "stT", st, arrival_s=0.2))
+    rt.run()
+    rt.check_conservation()
+    rt.verify_pool_mirrors()
+    return rt, hog_steps
+
+
+def test_preemption_parks_running_decode_and_bounds_deviation():
+    """With preemption enabled the starved tenant is admitted into a
+    preempted slot: preemptions fire, the starved tenant's mean TCT
+    improves, and the Thm. 2 max fair-share deviation is strictly
+    tighter than admission-only ordering."""
+    base, _ = _starvation_runtime(False)
+    pre, _ = _starvation_runtime(True)
+    assert base.preempted == 0
+    assert pre.preempted >= 1
+    assert pre.co.afs.preemptions >= 1
+    st_mean = lambda rt: sum(rt.sessions[f"st{i}"].tct
+                             for i in range(8)) / 8
+    assert st_mean(pre) < st_mean(base)
+    assert pre.afs_dev_max < base.afs_dev_max
+    s = pre.summarize()
+    assert s["preemptions"] == pre.preempted
+    assert s["afs_dev_max"] == pre.afs_dev_max
+
+
+def test_preempted_then_resumed_outputs_token_identical():
+    """A preempted decode resumes from its parked KV mid-step: its
+    outputs must be token-for-token identical to an uncontended run
+    (the pool is sized so the parked copy survives)."""
+    pre, hog_steps = _starvation_runtime(True)
+    solo = _rt(n_workers=1)
+    for i, st in enumerate(hog_steps):
+        solo.submit(AgentRequest(f"hog{i}", "hogT", st))
+    solo.run()
+    for i in range(2):
+        assert pre.sessions[f"hog{i}"].step_outputs == \
+            solo.sessions[f"hog{i}"].step_outputs
+    # the resume was delta-only: total regeneration is exactly the
+    # first-admission prompt prefills (2 hogs x 8 + 8 starved x 6) —
+    # every preempted hog's decoded prefix came back from the pool
+    assert pre.summarize()["regen_tokens"] == 2 * 8 + 8 * 6
+
+
+def test_preempt_deficit_threshold_gates_preemption():
+    """An impossible deficit threshold must disable preemption entirely
+    (the hysteresis knob is honored)."""
+    rt, _ = _starvation_runtime(True, deficit=1e9)
+    assert rt.preempted == 0
+
+
+def test_fail_while_preempted_mid_step_regenerates_and_finishes():
+    """The engine dies while a preempted victim waits in the queue
+    mid-step: its parked prefix is lost, and on recovery it regenerates
+    the whole context (decoded prefix included, §3.1) and still
+    completes the interrupted step's full token budget."""
+    saga = SAGAConfig(enable_preemption=True)
+    rt = _rt(n_workers=1, saga=saga,
+             fault_plan=[(1.2, "fail", 0), (1.5, "recover", 0)])
+    rng = np.random.RandomState(3)
+    hog_steps = [_steps(rng, 8, 150) for _ in range(2)]
+    st_steps = [_steps(rng, 6, 40, tool="web_api") for _ in range(8)]
+    for i, st in enumerate(hog_steps):
+        rt.submit(AgentRequest(f"hog{i}", "hogT", st))
+    for i, st in enumerate(st_steps):
+        rt.submit(AgentRequest(f"st{i}", "stT", st, arrival_s=0.2))
+    rt.run()
+    rt.check_conservation()
+    assert rt.n_done == 10
+    assert rt.preempted >= 1
+    assert rt.summarize()["faults_injected"] == 1
+    for i in range(2):
+        assert len(rt.sessions[f"hog{i}"].step_outputs[0]) == 150
+
+
+# -- determinism under faults + preemption ------------------------------
+
+_RUN_SNIPPET = """
+from repro.cluster.faults import chaos_plan
+from repro.cluster.workload import runtime_requests
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.models import lm
+from repro.serving.runtime import ServingRuntime
+import jax
+load_all()
+cfg = get_config("micro")
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+saga = SAGAConfig(enable_preemption=True)
+rt = ServingRuntime(cfg, params, n_workers=2, n_slots=2, max_len=256,
+                    pool_blocks=96, seed=0, saga=saga,
+                    fault_plan=chaos_plan(2, 8.0, n_events=8, seed=1))
+for r in runtime_requests(n_sessions=6, vocab=cfg.vocab, seed=4,
+                          n_steps=2, max_ctx=200):
+    rt.submit(r)
+rt.run()
+rt.check_conservation()
+print(repr(rt.summarize()))
+"""
+
+
+def test_fault_preemption_summary_identical_across_processes():
+    """Identical-seed dual runs with chaos faults AND preemption enabled
+    stay byte-identical across processes with different PYTHONHASHSEED —
+    the determinism contract extends to the fault/preemption paths."""
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run([sys.executable, "-c", _RUN_SNIPPET],
+                           env=env, capture_output=True, text=True,
+                           timeout=300)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    assert "'n_done': 6" in outs[0]
+    assert "afs_dev_max" in outs[0]     # fault-mode keys present
