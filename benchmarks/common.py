@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence
@@ -137,8 +138,14 @@ def save_fingerprint(name: str, text: str) -> Path:
     ``benchmarks/results/<name>_fingerprint.txt``.  CI diffs this
     against the committed twin in ``benchmarks/expected/`` so a
     determinism break surfaces as a readable unified diff of summary
-    dicts, not just a nonzero exit."""
+    dicts, not just a nonzero exit.
+
+    Written atomically (temp file + ``os.replace``): an interrupted
+    smoke run must not leave a truncated fingerprint behind — that
+    diffs as a baffling half-summary instead of a missing file."""
     RESULTS.mkdir(parents=True, exist_ok=True)
     p = RESULTS / f"{name}_fingerprint.txt"
-    p.write_text(text if text.endswith("\n") else text + "\n")
+    tmp = p.with_suffix(".txt.tmp")
+    tmp.write_text(text if text.endswith("\n") else text + "\n")
+    os.replace(tmp, p)
     return p

@@ -126,6 +126,7 @@ class AFSScheduler:
     def _flush_dirty(self) -> None:
         """Apply pending work-column deltas — O(|dirty|), the only rows
         ``recompute`` writes."""
+        # sagalint: ok(det-set-order) each tid writes only its own row, so visit order cannot change the flushed column
         for tid in self._dirty:
             row = self._row_of.get(tid)
             if row is not None:

@@ -32,6 +32,12 @@ Architecture map (module -> paper section):
     ``step_outputs`` / ``status`` / taken ``path``).
   * ``server.MultiWorkerServer`` — legacy blocking facade: a thin
     serial wrapper over the runtime.
+  * ``sanitizer.RuntimeSanitizer`` — read-only per-event conservation
+    auditor (``SAGA_SANITIZE=1`` / ``ServingRuntime(sanitize=True)``):
+    block/slot ownership, incremental indices, and registry stamps
+    re-checked after every dispatched event, failing at the first bad
+    event with the owning session and attempt named (see
+    ``docs/INVARIANTS.md``).
 
 Fault / preemption lifecycle (runtime twin of the simulator's
 attempt-stamped registry; ``cluster.faults`` plans drive both

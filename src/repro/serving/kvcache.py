@@ -40,6 +40,42 @@ class PagedKVPool:
     def used_blocks(self) -> int:
         return self.num_blocks - len(self.free)
 
+    def audit_blocks(self) -> List[Tuple[str, Optional[str]]]:
+        """Block-conservation audit: every block id must live in exactly
+        one place — the free list or exactly one session's table.
+        Returns (message, owning_session_or_None) per violation; empty
+        when the pool is consistent.  A double-release shows up as a
+        block both free and owned (or twice free); a leak as a block in
+        neither."""
+        errs: List[Tuple[str, Optional[str]]] = []
+        owner: Dict[int, str] = {}
+        for sid in sorted(self.tables):
+            for b in self.tables[sid]:
+                if b in owner:
+                    errs.append((f"block {b} owned by both "
+                                 f"{owner[b]!r} and {sid!r}", sid))
+                elif not 0 <= b < self.num_blocks:
+                    errs.append((f"block {b} of {sid!r} out of range",
+                                 sid))
+                else:
+                    owner[b] = sid
+        seen_free = set()
+        for b in self.free:
+            if b in seen_free:
+                errs.append((f"block {b} on the free list twice "
+                             "(double-release)", None))
+            elif b in owner:
+                errs.append((f"block {b} both free and owned by "
+                             f"{owner[b]!r} (double-release)",
+                             owner[b]))
+            seen_free.add(b)
+        lost = sorted(set(range(self.num_blocks)) - seen_free
+                      - set(owner))
+        if lost:
+            errs.append((f"blocks {lost[:8]} in no table and not free "
+                         "(leaked)", None))
+        return errs
+
     def session_bytes(self, sid: str) -> int:
         return len(self.tables.get(sid, [])) * self.bytes_per_block
 

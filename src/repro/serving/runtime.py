@@ -72,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import os
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -81,6 +82,7 @@ from repro.configs.base import ModelConfig
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.serving.engine import Engine
 from repro.serving.events import EventLoop, SessionQueue, _RuntimeQueueView
+from repro.serving.sanitizer import RuntimeSanitizer
 from repro.workflow.program import WorkflowInstance, as_instance
 
 INF = float("inf")
@@ -232,7 +234,8 @@ class ServingRuntime:
                  engines: Optional[List[Engine]] = None,
                  fault_plan: Optional[Sequence[Tuple[float, str,
                                                      int]]] = None,
-                 straggler_slowdown: float = 4.0):
+                 straggler_slowdown: float = 4.0,
+                 sanitize: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.engines = engines if engines is not None else [
@@ -289,6 +292,14 @@ class ServingRuntime:
         self._preempt_pending: Dict[int, str] = {}
         self._last_preempt = [-INF] * self.n_workers
         self._tenant_workload: Dict[str, float] = {}
+        # per-event conservation audit (repro.serving.sanitizer):
+        # read-only, so summaries are byte-identical with it on or off.
+        # The env gate is a debug opt-in that never alters scheduling.
+        if sanitize is None:
+            # sagalint: ok(det-env) sanitize toggles assertions only, never a scheduling decision — replay is unaffected
+            sanitize = os.environ.get("SAGA_SANITIZE", "") not in ("",
+                                                                   "0")
+        self._san = RuntimeSanitizer(self) if sanitize else None
         # instrumentation
         self.migrations = 0
         self.prefetch_copies = 0
@@ -343,8 +354,10 @@ class ServingRuntime:
         while self.ev:
             if self.ev.peek_time() > horizon_s:
                 break
-            _, kind, args = self.ev.pop()
+            t, kind, args = self.ev.pop()
             getattr(self, "_on_" + kind)(*args)
+            if self._san is not None:
+                self._san.after_event(t, kind, args)
             if kind != "epoch" and self.n_done == len(self.sessions):
                 break
         return self.sessions
@@ -357,8 +370,10 @@ class ServingRuntime:
         while ses.finished_at < 0 and self.ev:
             if self.ev.peek_time() > horizon_s:
                 break
-            _, kind, args = self.ev.pop()
+            t, kind, args = self.ev.pop()
             getattr(self, "_on_" + kind)(*args)
+            if self._san is not None:
+                self._san.after_event(t, kind, args)
 
     # -- step lifecycle -------------------------------------------------
     def _on_arrival(self, sid: str) -> None:
@@ -551,7 +566,7 @@ class ServingRuntime:
         if gen != self._gen[w]:
             return                   # stale: engine died since scheduling
         active = sorted(self._active[w],
-                        key=lambda s: self.sessions[s].slot)
+                        key=lambda s: (self.sessions[s].slot, s))
         if not active:
             self._round_live[w] = False
             return

@@ -1,0 +1,321 @@
+"""sagalint analyzer tests: per-rule fixtures (positive, suppressed,
+negative), the CFG early-return lifecycle leak, self-check that the
+repo tree lints clean, and the seeded-bug demo — reverting a real
+attempt-stamp guard in the runtime is caught by lint."""
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.sagalint import lint_file, lint_paths, main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _lint(tmp_path, source, name="fix.py"):
+    p = tmp_path / name
+    p.write_text(source)
+    return lint_file(p)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# -- determinism rules -------------------------------------------------
+def test_det_hash(tmp_path):
+    fs = _lint(tmp_path, (
+        "def f(x):\n"
+        "    a = hash(x)\n"
+        "    b = hash(7)\n"
+        "    c = hash('salt')  # sagalint: ok(det-hash) demo\n"
+        "    return a, b, c\n"))
+    assert _rules(fs) == ["det-hash"]
+    assert fs[0].line == 2
+    assert "FNV" in fs[0].message
+
+
+def test_det_clock(tmp_path):
+    fs = _lint(tmp_path, (
+        "import time\n"
+        "def f(self):\n"
+        "    t = time.time()\n"
+        "    u = self.clock.now()\n"          # instance call: fine
+        "    return t, u, time.sleep\n"))
+    assert _rules(fs) == ["det-clock"]
+    assert fs[0].line == 3
+
+
+def test_det_rng(tmp_path):
+    fs = _lint(tmp_path, (
+        "import random\n"
+        "import numpy as np\n"
+        "def f(self):\n"
+        "    a = random.random()\n"
+        "    b = random.Random()\n"
+        "    c = random.Random(0)\n"          # seeded: fine
+        "    d = np.random.rand(3)\n"
+        "    e = np.random.RandomState()\n"
+        "    g = np.random.RandomState(0)\n"  # seeded: fine
+        "    h = self.rng.gauss(0, 1)\n"      # instance stream: fine
+        "    return a, b, c, d, e, g, h\n"))
+    assert _rules(fs) == ["det-rng"] * 4
+    assert [f.line for f in fs] == [4, 5, 7, 8]
+
+
+def test_det_env(tmp_path):
+    fs = _lint(tmp_path, (
+        "import os\n"
+        "def f():\n"
+        "    a = os.environ.get('X')\n"
+        "    b = os.getenv('Y')\n"
+        "    # sagalint: ok(det-env) fixture demo of a standalone pragma\n"
+        "    c = os.environ['Z']\n"
+        "    return a, b, c\n"))
+    assert _rules(fs) == ["det-env", "det-env"]
+    assert [f.line for f in fs] == [3, 4]
+
+
+SET_ORDER_SRC = """\
+class C:
+    def __init__(self):
+        self.active = set()
+        self.q = []
+
+    def bad_key(self):
+        return sorted(self.active, key=lambda s: len(s))
+
+    def good_tiebreak(self):
+        return sorted(self.active, key=lambda s: (len(s), s))
+
+    def good_plain(self):
+        return sorted(self.active)
+
+    def bad_pick(self):
+        return next(iter(self.active))
+
+    def bad_pop(self):
+        return self.active.pop()
+
+    def bad_spray(self):
+        for s in self.active:
+            self._queue_push(0, s)
+
+    def good_spray(self):
+        for s in sorted(self.active):
+            self._queue_push(0, s)
+
+    def _queue_push(self, p, s):
+        self.q.append((p, s))
+"""
+
+
+def test_det_set_order(tmp_path):
+    fs = _lint(tmp_path, SET_ORDER_SRC)
+    assert _rules(fs) == ["det-set-order"] * 4
+    assert [f.line for f in fs] == [7, 16, 19, 22]
+
+
+def test_set_order_shared_state_mutation(tmp_path):
+    fs = _lint(tmp_path, (
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self.dirty = set()\n"
+        "        self.rows = {}\n"
+        "    def flush(self):\n"
+        "        for t in self.dirty:\n"
+        "            self.rows[t] = 1.0\n"))
+    assert _rules(fs) == ["det-set-order"]
+
+
+# -- lifecycle rules ---------------------------------------------------
+LEAK_SRC = """\
+class D:
+    def handle(self, sid, w):
+        self.inflight[sid] = (w, 0)
+        ok = self.engine.poke(sid)
+        if not ok:
+            return
+        self.inflight.pop(sid)
+"""
+
+NO_LEAK_SRC = LEAK_SRC.replace(
+    "            return\n",
+    "            self.inflight.pop(sid)\n            return\n")
+
+
+def test_life_leak_early_return(tmp_path):
+    fs = _lint(tmp_path, LEAK_SRC)
+    assert _rules(fs) == ["life-leak"]
+    assert fs[0].line == 3                   # the acquire
+    assert "line 6" in fs[0].message         # the leaking exit
+    assert not _lint(tmp_path, NO_LEAK_SRC, "ok.py")
+
+
+def test_life_leak_handoff_and_raise_exempt(tmp_path):
+    fs = _lint(tmp_path, (
+        "class D:\n"
+        "    def ok_handoff(self, sid, w):\n"
+        "        self.inflight[sid] = (w, 0)\n"
+        "        if not self.engine.poke(sid):\n"
+        "            self.ev.schedule(0.0, 'retry', (sid,))\n"
+        "            return\n"
+        "        self.inflight.pop(sid)\n"
+        "    def ok_crash(self, sid, w):\n"
+        "        self.inflight[sid] = (w, 0)\n"
+        "        if not self.engine.poke(sid):\n"
+        "            raise RuntimeError('invariant')\n"
+        "        self.inflight.pop(sid)\n"))
+    assert not fs
+
+
+def test_life_leak_slot_family(tmp_path):
+    fs = _lint(tmp_path, (
+        "class D:\n"
+        "    def admit(self, sid, w):\n"
+        "        slot = self.engines[w].start_session(sid)\n"
+        "        if slot is None:\n"
+        "            return False\n"
+        "        if not self.healthy(w):\n"
+        "            return False\n"           # slot leaks here
+        "        self.engines[w].release_session(sid)\n"
+        "        return True\n"))
+    assert _rules(fs) == ["life-leak"]
+    assert "slot" in fs[0].message
+
+
+GUARD_SRC = """\
+class D:
+    def _on_step_done(self, sid, attempt=-1):
+        ses = self.sessions[sid]
+        ses.count += 1
+"""
+
+GUARDED_SRC = """\
+class D:
+    def _on_step_done(self, sid, attempt=-1):
+        rec = self.inflight.get(sid)
+        if rec is None or rec[1] != attempt:
+            return
+        self.sessions[sid].count += 1
+"""
+
+
+def test_life_guard(tmp_path):
+    fs = _lint(tmp_path, GUARD_SRC)
+    assert _rules(fs) == ["life-guard"]
+    assert "attempt" in fs[0].message
+    assert not _lint(tmp_path, GUARDED_SRC, "ok.py")
+    sup = GUARD_SRC.replace(
+        "    def _on_step_done(self, sid, attempt=-1):\n",
+        "    # sagalint: ok(life-guard) fixture: idempotent handler\n"
+        "    def _on_step_done(self, sid, attempt=-1):\n")
+    assert not _lint(tmp_path, sup, "sup.py")
+
+
+# -- pragma hygiene ----------------------------------------------------
+def test_pragma_requires_reason_and_use(tmp_path):
+    fs = _lint(tmp_path, (
+        "import os\n"
+        "def f():\n"
+        "    return os.getenv('X')  # sagalint: ok(det-env)\n"))
+    assert sorted(_rules(fs)) == ["det-env", "pragma"]
+    fs = _lint(tmp_path, (
+        "def g():\n"
+        "    return 1  # sagalint: ok(det-hash) nothing here\n"),
+        "unused.py")
+    assert _rules(fs) == ["pragma-unused"]
+    fs = _lint(tmp_path, (
+        "def h():\n"
+        "    return 2  # sagalint: ok(not-a-rule) whatever\n"),
+        "unknown.py")
+    assert "pragma" in _rules(fs)
+
+
+def test_pragma_in_docstring_is_inert(tmp_path):
+    fs = _lint(tmp_path, (
+        '"""Docs: suppress with # sagalint: ok(det-hash) reason."""\n'
+        "def f():\n"
+        "    return 1\n"))
+    assert not fs
+
+
+# -- scoping -----------------------------------------------------------
+def test_scheduler_scope(tmp_path):
+    src = "import os\nX = os.getenv('A')\n"
+    core = tmp_path / "repro" / "core"
+    core.mkdir(parents=True)
+    launch = tmp_path / "repro" / "launch"
+    launch.mkdir(parents=True)
+    (core / "mod.py").write_text(src)
+    (launch / "mod.py").write_text(src)
+    assert _rules(lint_file(core / "mod.py")) == ["det-env"]
+    assert not lint_file(launch / "mod.py")
+
+
+# -- whole-tree self-check ---------------------------------------------
+def test_repo_lints_clean(capsys):
+    assert main([str(REPO / "src" / "repro")]) == 0
+
+
+def test_cli_fixture_diagnostics(tmp_path, capsys):
+    p = tmp_path / "bad.py"
+    p.write_text("def f(x):\n    return hash(x)\n")
+    assert main([str(p)]) == 1
+    out = capsys.readouterr().out
+    assert re.search(r"bad\.py:2:\d+: det-hash:", out)
+
+
+# -- seeded known bugs -------------------------------------------------
+RUNTIME = REPO / "src" / "repro" / "serving" / "runtime.py"
+
+
+def test_reverted_attempt_guard_is_caught(tmp_path):
+    """Deleting the stale-attempt guard from ``_on_prefill_done`` (the
+    exact bug an engine-failure race would reintroduce) must trip
+    life-guard."""
+    src = RUNTIME.read_text()
+    guard = ("        rec = self.inflight.get(sid)\n"
+             "        if rec is None or rec[1] != attempt:\n"
+             "            return       # stale: the attempt was "
+             "cancelled by a fault\n")
+    assert guard in src, "runtime guard moved; update this test"
+    broken = src.replace(guard, "        rec = self.inflight.get(sid)\n")
+    p = tmp_path / "runtime.py"
+    p.write_text(broken)
+    fs = [f for f in lint_file(p) if f.rule == "life-guard"]
+    assert fs and any("_on_prefill_done" in f.message for f in fs)
+    # the pristine copy stays clean outside the tree too
+    q = tmp_path / "runtime_ok.py"
+    q.write_text(src)
+    assert not [f for f in lint_file(q) if f.rule == "life-guard"]
+
+
+def test_fnv_replaced_by_hash_is_caught(tmp_path):
+    """Swapping an FNV-1a call for builtin hash() in the simulator's
+    routing path must trip det-hash."""
+    sim = (REPO / "src" / "repro" / "cluster" / "simulator.py")
+    src = sim.read_text()
+    assert re.search(r"(?<!def )_fnv1a\(", src)
+    broken = re.sub(r"(?<!def )_fnv1a\(", "hash(", src)
+    p = tmp_path / "simulator.py"
+    p.write_text(broken)
+    assert "det-hash" in _rules(lint_file(p))
+    q = tmp_path / "simulator_ok.py"
+    q.write_text(src)
+    assert "det-hash" not in _rules(lint_file(q))
+
+
+def test_lint_paths_counts(tmp_path):
+    (tmp_path / "a.py").write_text("A = 1\n")
+    (tmp_path / "b.py").write_text("def f(x):\n    return hash(x)\n")
+    findings, n = lint_paths([str(tmp_path)])
+    assert n == 2
+    assert _rules(findings) == ["det-hash"]
+
+
+def test_parse_error_reported(tmp_path):
+    fs = _lint(tmp_path, "def broken(:\n")
+    assert _rules(fs) == ["parse-error"]
+    with pytest.raises(SystemExit):
+        main([])
