@@ -30,6 +30,11 @@ The smoke gate additionally asserts:
     SAGA-with-preemption must preempt at least one running decode and
     show strictly lower max AFS deviation (Thm. 2) than admission-only
     ordering;
+  * **paged-vs-gather A/B** — the true-paged decode path (attend over
+    pool block tables, metadata-only park/resume) against the gather
+    oracle: byte-identical summaries, identical regeneration, zero
+    park/resume device-copy bytes in paged mode (vs real copies in
+    gather), with the per-decode-round latency delta reported;
   * byte-identical SAGA summaries (clean + chaos + preemption) for two
     identical-seed runs in-process AND across processes with different
     PYTHONHASHSEED (the runtime's determinism contract), with the
@@ -91,12 +96,12 @@ def _sessions(smoke: bool):
                             n_steps=n_steps, max_ctx=MAX_LEN - 32)
 
 
-def run_policy(cfg, params, saga, reqs, engines=None):
+def run_policy(cfg, params, saga, reqs, engines=None, paged=True):
     """One runtime pass; returns (runtime, engine-counter deltas)."""
     rt = ServingRuntime(cfg, params, n_workers=N_WORKERS, saga=saga,
                         n_slots=N_SLOTS, max_len=MAX_LEN,
                         pool_blocks=POOL_BLOCKS, seed=SEED, perf=PERF,
-                        engines=engines)
+                        engines=engines, paged=paged)
     before = {k: rt.stats()[k] for k in ENGINE_KEYS}
     for r in reqs:
         rt.submit(r)
@@ -235,6 +240,62 @@ def run_preemption_ab(cfg, params) -> dict:
     }
 
 
+def run_paged_gather_ab(cfg, params) -> dict:
+    """Paged-vs-gather leg: the true-paged decode path (attend over
+    block tables, metadata-only park/resume) against the gather oracle
+    (contiguous slot caches, park/resume as real device copies).  Both
+    must make bit-identical scheduling decisions AND emit bit-identical
+    tokens — the whole summary repr matches — while paged moves zero
+    park/resume device bytes and regenerates exactly the same tokens."""
+    reqs = _sessions(smoke=True)
+    t0 = time.time()
+    paged_rt, paged_eng = run_policy(cfg, params, SAGAConfig(), reqs)
+    paged_wall = time.time() - t0
+    t0 = time.time()
+    gather_rt, gather_eng = run_policy(cfg, params, SAGAConfig(), reqs,
+                                       paged=False)
+    gather_wall = time.time() - t0
+    if repr(paged_rt.summarize()) != repr(gather_rt.summarize()):
+        raise AssertionError(
+            "paged and gather summaries diverged — the paged path "
+            "changed scheduling decisions or token ids")
+    if paged_eng["regen_tokens"] != gather_eng["regen_tokens"]:
+        raise AssertionError(
+            f"regen bytes changed: paged {paged_eng['regen_tokens']} vs "
+            f"gather {gather_eng['regen_tokens']}")
+    ps, gs = paged_rt.stats(), gather_rt.stats()
+    if ps["park_copy_bytes"] != 0 or ps["resume_copy_bytes"] != 0:
+        raise AssertionError(
+            f"paged park/resume moved device bytes: "
+            f"park={ps['park_copy_bytes']} resume={ps['resume_copy_bytes']}")
+    if gs["park_copy_bytes"] <= 0 or gs["resume_copy_bytes"] <= 0:
+        raise AssertionError("gather oracle moved no park/resume bytes "
+                             "— the A/B is not exercising park/resume")
+    rounds = max(paged_eng["decode_steps"], 1)
+    # per-round wall is informational: whichever mode compiles first on
+    # a cold jit cache absorbs its compile set (CI warms both via the
+    # persistent compilation cache)
+    out = {
+        "paged_wall_s": paged_wall,
+        "gather_wall_s": gather_wall,
+        "decode_rounds": paged_eng["decode_steps"],
+        "paged_us_per_round": 1e6 * paged_wall / rounds,
+        "gather_us_per_round": 1e6 * gather_wall / rounds,
+        "round_latency_delta_us":
+            1e6 * (paged_wall - gather_wall) / rounds,
+        "paged_park_copy_bytes": ps["park_copy_bytes"],
+        "paged_resume_copy_bytes": ps["resume_copy_bytes"],
+        "gather_park_copy_bytes": gs["park_copy_bytes"],
+        "gather_resume_copy_bytes": gs["resume_copy_bytes"],
+    }
+    emit("serve_paged_round", paged_wall / rounds,
+         f"gather={out['gather_us_per_round']:.0f}us "
+         f"delta={out['round_latency_delta_us']:+.0f}us "
+         f"park_bytes=0 resume_bytes=0 vs "
+         f"{gs['park_copy_bytes']}/{gs['resume_copy_bytes']}")
+    return out
+
+
 def _fingerprint() -> str:
     """Deterministic SAGA-run summaries (fresh engines, fixed seed): the
     byte-identity contract compared across runs and processes, covering
@@ -279,8 +340,10 @@ def smoke() -> None:
     out = run_ab(smoke=True)
     chaos = run_chaos(cfg, params)
     pre = run_preemption_ab(cfg, params)
+    pg = run_paged_gather_ab(cfg, params)
     out["chaos"] = chaos
     out["preemption"] = pre
+    out["paged_vs_gather"] = pg
     save_json("serve_bench_smoke", out)
     a = _fingerprint()
     assert a == _fingerprint(), "same-process summaries diverged"
@@ -305,6 +368,10 @@ def smoke() -> None:
           f"preemption dev {pre['afs_dev_preempt']:.3f} vs "
           f"{pre['afs_dev_admission']:.3f} "
           f"({pre['dev_reduction_x']:.2f}x, {pre['preemptions']} parks); "
+          f"paged==gather byte-identical, park/resume copies 0 vs "
+          f"{pg['gather_park_copy_bytes']}/"
+          f"{pg['gather_resume_copy_bytes']} bytes "
+          f"(round delta {pg['round_latency_delta_us']:+.0f}us); "
           f"determinism green")
 
 

@@ -11,13 +11,23 @@ catches at end-of-run:
   slot              ``start_session``           ``release_session`` /
                                                 ``park_session`` /
                                                 ``fail``
-  blocks            ``park`` / ``import_kv``    ``free_session`` /
-                                                ``evict_session``
+  blocks            ``park`` / ``import_kv`` /  ``free_session`` /
+                    ``*pool*.alloc`` /          ``evict_session``
+                    ``*pool*.extend`` /
+                    ``*pool*.ensure_tail_room``
   afs-work          ``note_progress``           ``refund_work``
   inflight          ``X.inflight[sid] = ...``   ``X.inflight.pop`` /
                                                 ``del X.inflight[...]``
   idle-set          ``on_worker_busy``          ``on_worker_idle``
   ================  ==========================  =========================
+
+Paged serving moved block acquisition from park-time to admit-time
+(allocate-at-admit: ownership spans admit→finish, and park/resume are
+metadata-only flips that neither acquire nor release).  The alloc-side
+names are too generic to match bare (``list.extend`` is everywhere), so
+they only count when called through a receiver chain that passes a
+``pool`` attribute or name — ``self.pool.alloc(sid)``,
+``eng.pool.extend(...)``.
 
 Rules:
 
@@ -72,6 +82,12 @@ HANDOFF_CALLS = {
 # joining a live continuous-batching round (self._active[w].add(sid))
 # also hands the slot off — the round loop owns its release from there
 _JOIN_ATTRS = {"_active"}
+
+# allocate-at-admit block acquires (paged serving): bare names are too
+# generic (`list.extend`, arena `alloc` helpers), so they only classify
+# when the call's receiver chain passes a KV pool
+_POOL_SCOPED_ACQUIRES = {"alloc", "extend", "ensure_tail_room"}
+_POOL_RECEIVERS = {"pool"}
 
 STAMP_PARAMS = ("attempt", "gen", "generation")
 
@@ -134,6 +150,10 @@ class _NodeActions:
                     self.acquires.add(fam)
                 if callee in names["release"]:
                     self.releases.add(fam)
+            if callee in _POOL_SCOPED_ACQUIRES \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and _chain_mentions(sub.func.value, _POOL_RECEIVERS):
+                self.acquires.add("blocks")
             # X.inflight.pop(...)
             if callee == "pop" and isinstance(sub.func, ast.Attribute) \
                     and _is_inflight_chain(sub.func.value):

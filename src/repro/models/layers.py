@@ -332,6 +332,63 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
     return o.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
 
 
+def paged_kv_update(k_pool, v_pool, k_new, v_new, block_ids, offsets):
+    """Write one decode step's K/V per batch row into paged pool blocks.
+
+    k_pool/v_pool: (num_blocks, block, K, dh) — ONE layer's blocks;
+    k_new/v_new: (B, 1, K, dh); block_ids/offsets: (B,) int32 append
+    destinations.  Rows whose block id is out of range are dropped —
+    idle batch rows pass ``num_blocks`` as a sentinel, so a partially
+    occupied continuous batch never writes stale KV anywhere.
+    """
+    kp = k_pool.at[block_ids, offsets].set(
+        k_new[:, 0].astype(k_pool.dtype), mode="drop")
+    vp = v_pool.at[block_ids, offsets].set(
+        v_new[:, 0].astype(v_pool.dtype), mode="drop")
+    return kp, vp
+
+
+def paged_kv_gather(k_pool, v_pool, tables):
+    """Gather per-row block tables to a contiguous (B, nb*block, K, dh)
+    view.  With nb*block equal to the gather-mode cache's max_len this
+    produces the same shapes (hence the same XLA program) as dense
+    decode over a contiguous cache; positions past each row's length
+    hold unrelated block contents, but ``decode_attention`` masks them
+    to NEG_INF before any reduction, so their softmax weight underflows
+    to exactly 0.0 and the outputs stay bit-identical."""
+    B, nb = tables.shape
+    blk = k_pool.shape[1]
+    k = k_pool[tables].reshape(B, nb * blk, k_pool.shape[2],
+                               k_pool.shape[3])
+    v = v_pool[tables].reshape(B, nb * blk, v_pool.shape[2],
+                               v_pool.shape[3])
+    return k, v
+
+
+def gqa_attention_decode_paged(x, p, cfg, env, k_pool, v_pool, tables,
+                               pos, block_ids, offsets):
+    """One-token decode over pool blocks: the twin of
+    ``gqa_attention_decode`` with the contiguous (B, S, K, dh) cache
+    replaced by (pool, block-table) pairs.  Appends the new token's K/V
+    into each row's tail block, then attends over the gathered block
+    view.  Returns (y, k_pool, v_pool)."""
+    B = x.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, p["knorm"], cfg.norm_eps)
+    q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos_b[:, None], cfg.rope_theta)
+    k_pool, v_pool = paged_kv_update(k_pool, v_pool, k, v, block_ids,
+                                     offsets)
+    kg, vg = paged_kv_gather(k_pool, v_pool, tables)
+    y = decode_attention(q, kg, vg, pos_b, window=cfg.sliding_window)
+    return jnp.einsum("bshx,hxd->bsd", y, p["wo"]), k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # sqrt(T)-remat sequential scan (mamba / rwkv training)
 # ---------------------------------------------------------------------------

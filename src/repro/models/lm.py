@@ -438,6 +438,25 @@ def _uniform_decode_block(x, lp, kc, vc, cfg, env, pos):
     return L.pin_bf16(x + L.pin_bf16(y)), kc, vc
 
 
+def _uniform_decode_block_paged(x, lp, kp, vp, tables, pos, block_ids,
+                                offsets, cfg, env):
+    """Twin of ``_uniform_decode_block`` attending over pool blocks
+    instead of a contiguous per-slot cache; identical residual-stream
+    pinning so both paths round the stream bit-identically."""
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, kp, vp = L.gqa_attention_decode_paged(h, lp["attn"], cfg, env, kp,
+                                             vp, tables, pos, block_ids,
+                                             offsets)
+    x = L.pin_bf16(x + L.pin_bf16(y))
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "router" in lp["mlp"]:
+        y = L.moe_block(h, lp["mlp"], cfg, env,
+                        impl=env.opts.get("moe_impl", "ep"))
+    else:
+        y = L.ffn_swiglu(h, lp["mlp"], env)
+    return L.pin_bf16(x + L.pin_bf16(y)), kp, vp
+
+
 # --- jamba superblocks -----------------------------------------------------
 def _jamba_superblock(x, sb, cfg, env, positions, *, states=None,
                       collect=False, pos=None):
@@ -776,3 +795,34 @@ def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x, cfg)
     return logits, new_cache
+
+
+def decode_step_paged(params, tokens, k_pool, v_pool, tables, pos,
+                      block_ids, offsets, cfg: ModelConfig,
+                      env: ShardingEnv):
+    """Paged twin of ``decode_step``: the contiguous ``cache`` dict is
+    replaced by the serving pool's block arrays plus per-row block
+    tables, so parked/resident KV never moves — decode attends over it
+    in place.
+
+    tokens: (B, 1) int32; k_pool/v_pool: (L, num_blocks, block, K, dh);
+    tables: (B, max_blocks) int32 (rows padded with any in-range id —
+    padded positions are masked); pos: (B,) position of the new token;
+    block_ids/offsets: (B,) append destination of the new token's K/V
+    (idle rows pass num_blocks as an out-of-range drop sentinel).
+    Covers the decoder-only GQA families the serving engine admits
+    (dense / moe / vlm).  Returns (logits (B,1,V), k_pool, v_pool)."""
+    assert not (cfg.enc_dec or cfg.use_mla or cfg.family == "ssm"
+                or cfg.attn_period), \
+        "paged decode covers the uniform GQA-cache families"
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(x, xs):
+        lp, kp, vp = xs
+        x, kp, vp = _uniform_decode_block_paged(
+            x, lp, kp, vp, tables, pos, block_ids, offsets, cfg, env)
+        return x, (kp, vp)
+
+    x, ys = layer_scan(body, x, (params["layers"], k_pool, v_pool), env)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), ys[0], ys[1]

@@ -3,14 +3,28 @@ concurrent runtime under the SAGA coordinator.
 
 Architecture map (module -> paper section):
 
-  * ``kvcache.PagedKVPool`` — PagedAttention-style block pool; WA-LRU /
-    TTL decisions (§4.1-§4.2) mutate only block tables, never device
-    memory.
-  * ``engine.Engine`` — one worker: jitted prefill + continuous-batching
-    decode slots, park/resume of idle session KV into the pool
-    (delta-only prefill on resume), KV export/import for pool-to-pool
-    migration.  Admission is non-asserting: a full engine returns
-    ``None`` and the runtime queues.
+  * ``kvcache.PagedKVPool`` — PagedAttention-style block pool and the
+    *only* home a session's KV ever has: blocks are allocated at admit
+    (``alloc``/``extend``), the decode step appends into the tail block
+    (``ensure_tail_room``/``append_token``), and WA-LRU / TTL decisions
+    (§4.1-§4.2) mutate only block tables, never device memory.
+    Capacity is split nominal/headroom: parked sessions compete for the
+    ``num_blocks`` the coordinator meters, while resident (decoding)
+    sessions draw from a per-slot headroom — so paged and gather modes
+    make bit-identical park/evict/admit policy decisions.
+  * ``engine.Engine`` — one worker: jitted prefill scattered straight
+    into pool blocks + continuous-batching decode that attends over
+    per-slot block tables (``lm.decode_step_paged``), appending each new
+    token's K/V on device.  Park / resume / AFS preemption are pure
+    metadata flips (``park_resident``/``mark_resident`` — zero device
+    copies, counted in ``stats()`` as ``park_copy_bytes`` /
+    ``resume_copy_bytes`` staying 0); resume prefills only the context
+    delta.  KV export/import for pool-to-pool migration still copies,
+    but only the session's owned blocks.  ``Engine(paged=False)`` keeps
+    the original contiguous-slot gather path as the reference oracle —
+    both modes emit bit-identical token ids.  Admission is
+    non-asserting: a full engine returns ``None`` and the runtime
+    queues.
   * ``events`` — deterministic virtual-time event heap + AFS-ordered
     ``SessionQueue`` (§6 admission); the byte-identical replay
     substrate.

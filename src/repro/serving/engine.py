@@ -1,16 +1,26 @@
 """Single-worker serving engine: continuous batching over decode slots +
-paged park/resume of idle session KV.
+paged KV living in pool blocks from admit to finish.
 
 The engine executes REAL forward passes (jitted prefill / batched decode)
-against a model from the zoo.  Idle sessions park their KV into the
-PagedKVPool; WA-LRU/TTL decisions from the coordinator mutate only block
-tables.  On TPU the decode hot loop is the Pallas paged-attention
-kernel; on CPU we gather parked blocks into the contiguous decode cache
-(same math — the kernels are validated against this path in tests).
+against a model from the zoo.  In the default **paged** mode a session's
+KV lands in `PagedKVPool` blocks at admit (prefill scatters straight
+into blocks), the batched decode step attends over per-slot block tables
+and appends each new token's K/V into the tail block on device, and
+park/resume/preempt are pure metadata flips — zero device copies.  A
+decode slot is just a batch-row binding, so co-residency is bounded by
+pool memory, not slot-cache memory.
+
+``Engine(paged=False)`` keeps the original gather path as the reference
+oracle: contiguous per-slot caches, park/resume as real pool<->slot
+copies.  Both modes share the same prefill, the same policy-visible
+capacity arithmetic, and (by construction of the masked attention) emit
+bit-identical token ids — `tests/test_paged_decode.py` gates this per
+architecture family.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -25,13 +35,16 @@ from repro.serving.kvcache import PagedKVPool
 
 # jitted prefill specializes on sequence length: bucket lengths so a
 # trace-driven workload compiles O(max_len / bucket) programs, not one
-# per distinct prompt length
+# per distinct prompt length.  Engines pad to lcm(bucket, block_size)
+# so a compile bucket never splits a KV block (PagedKVPool.extend
+# asserts this invariant).
 _PREFILL_BUCKET = 32
 
-# one jitted (decode, prefill) pair per (config, sharding-options) —
-# engines of the same model share compiled code instead of each instance
-# re-tracing through its own bound-method closures (a multi-engine
-# runtime otherwise pays the full compile set per engine)
+# one jitted (decode, prefill, paged-decode) triple per (config,
+# sharding-options) — engines of the same model share compiled code
+# instead of each instance re-tracing through its own bound-method
+# closures (a multi-engine runtime otherwise pays the full compile set
+# per engine)
 _JIT_CACHE: Dict[tuple, tuple] = {}
 
 
@@ -50,11 +63,25 @@ def _jitted_fns(cfg: ModelConfig, env: ShardingEnv):
                                   env)
 
         def prefill_fn(params, tokens, pad_to):
-            return lm.prefill(params, {"tokens": tokens}, cfg, env,
-                              max_len=pad_to)
+            batch = {"tokens": tokens}
+            if cfg.family == "vlm":
+                # text-only serving of a VLM: zero-length patch stream
+                # (patches are pre-projected d_model embeddings
+                # concatenated before the tokens, so an empty one is
+                # exact, not an approximation)
+                batch["patches"] = jnp.zeros(
+                    (tokens.shape[0], 0, cfg.d_model), jnp.bfloat16)
+            return lm.prefill(params, batch, cfg, env, max_len=pad_to)
+
+        def paged_decode_fn(params, tokens, k_pool, v_pool, tables,
+                            positions, block_ids, offsets):
+            return lm.decode_step_paged(params, tokens, k_pool, v_pool,
+                                        tables, positions, block_ids,
+                                        offsets, cfg, env)
 
         fns = (jax.jit(decode_fn),
-               jax.jit(prefill_fn, static_argnames=("pad_to",)))
+               jax.jit(prefill_fn, static_argnames=("pad_to",)),
+               jax.jit(paged_decode_fn))
         if key is not None:
             _JIT_CACHE[key] = fns
     return fns
@@ -63,7 +90,7 @@ def _jitted_fns(cfg: ModelConfig, env: ShardingEnv):
 @dataclasses.dataclass
 class SlotState:
     session_id: Optional[str] = None
-    length: int = 0                 # tokens currently in the slot cache
+    length: int = 0                 # tokens currently cached for the slot
 
 
 class Engine:
@@ -71,9 +98,12 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 512, pool_blocks: int = 64,
-                 block_size: int = 16, env: Optional[ShardingEnv] = None):
+                 block_size: int = 16, env: Optional[ShardingEnv] = None,
+                 paged: bool = True):
         assert not cfg.enc_dec and cfg.family in ("dense", "moe", "vlm"), \
             "engine demo supports decoder-only KV families"
+        assert not cfg.use_mla, \
+            "engine KV paths assume the GQA (k, v) cache layout"
         self.cfg = cfg
         self.params = params
         self.env = env or ShardingEnv(None, opts={"remat": False,
@@ -81,17 +111,40 @@ class Engine:
                                                   "moe_impl": "dense"})
         self.n_slots = n_slots
         self.max_len = max_len
+        self.paged = paged
         self.slots = [SlotState() for _ in range(n_slots)]
-        self.cache = lm.init_cache(cfg, n_slots, max_len)
+        if paged:
+            assert max_len % block_size == 0, \
+                "paged decode needs max_len to be a whole number of blocks"
+            self.max_nb = max_len // block_size
+            # resident headroom: every slot can hold a max_len session in
+            # blocks without ever competing with the parked population,
+            # so policy-visible capacity stays identical to gather mode
+            headroom = n_slots * self.max_nb
+            self.cache = None
+        else:
+            self.max_nb = 0
+            headroom = 0
+            self.cache = lm.init_cache(cfg, n_slots, max_len)
         self.pool = PagedKVPool(cfg.n_layers, pool_blocks, block_size,
-                                cfg.n_kv_heads, cfg.head_dim)
+                                cfg.n_kv_heads, cfg.head_dim,
+                                headroom_blocks=headroom)
+        # prefill compile quantum: a whole number of blocks AND of the
+        # base bucket, so a bucket boundary never splits a tail block
+        self._prefill_quantum = (_PREFILL_BUCKET * block_size
+                                 // math.gcd(_PREFILL_BUCKET, block_size))
         # stats
         self.prefill_tokens = 0
         self.regen_tokens = 0
         self.decode_steps = 0
+        # device-copy accounting for the park/resume/migration paths
+        # (paged mode: park/resume are metadata-only and stay 0)
+        self.park_copy_bytes = 0
+        self.resume_copy_bytes = 0
+        self.migration_copy_bytes = 0
 
-        self._jit_decode, self._jit_prefill = _jitted_fns(self.cfg,
-                                                          self.env)
+        (self._jit_decode, self._jit_prefill,
+         self._jit_paged_decode) = _jitted_fns(self.cfg, self.env)
 
     # -- slot management -----------------------------------------------------
     def free_slot(self) -> Optional[int]:
@@ -118,14 +171,15 @@ class Engine:
     def _prefill_kv(self, tokens: np.ndarray):
         """Prefill ``tokens`` and return (k, v) of shape (L, n, K, dh).
 
-        Token length is padded up to a 32-token compile bucket (the
-        jitted prefill specializes on sequence length, so unbucketed
-        variable-length agent prompts recompile per distinct length).
-        Padding is exact under the causal mask: positions < n attend to
-        the same key set either way, so their KV is bit-identical."""
+        Token length is padded up to the compile quantum — lcm(32-token
+        bucket, block size) — so the jitted prefill compiles O(max_len /
+        quantum) programs and a bucket boundary never splits a KV
+        block.  Padding is exact under the causal mask: positions < n
+        attend to the same key set either way, so their KV is
+        bit-identical."""
         n = len(tokens)
-        pad_to = min(self.max_len, -(-n // _PREFILL_BUCKET)
-                     * _PREFILL_BUCKET)
+        pad_to = min(self.max_len, -(-n // self._prefill_quantum)
+                     * self._prefill_quantum)
         pad_to = max(pad_to, n)
         padded = np.zeros(pad_to, np.int32)
         padded[:n] = tokens
@@ -144,9 +198,45 @@ class Engine:
         if slot is None:
             return None
         tokens = np.asarray(tokens, np.int32)
+        if self.paged:
+            self._admit_paged(sid, tokens, cached_hit)
+            self.slots[slot] = SlotState(sid, len(tokens))
+        else:
+            self._admit_gather(slot, sid, tokens, cached_hit)
+            self.slots[slot].session_id = sid
+        return slot
+
+    def _admit_paged(self, sid: str, tokens: np.ndarray,
+                     cached_hit: bool) -> None:
+        """Land the session's KV in pool blocks.  A cached hit is a pure
+        metadata flip (parked -> resident) plus a delta prefill scattered
+        straight into blocks; a miss allocates at admit and prefills the
+        full context into blocks.  No gather, no slot copy — resume-copy
+        bytes stay 0."""
+        pool = self.pool
+        if cached_hit and pool.has(sid):
+            n = pool.lens[sid]
+            pool.mark_resident(sid)
+            delta = tokens[n:]
+            if len(delta):
+                dk, dv = self._prefill_kv(delta)
+                pool.extend(sid, dk, dv, bucket=self._prefill_quantum)
+                self.prefill_tokens += len(delta)
+        else:
+            pool.alloc(sid)
+            k, v = self._prefill_kv(tokens)
+            pool.extend(sid, k, v, bucket=self._prefill_quantum)
+            self.prefill_tokens += len(tokens)
+            self.regen_tokens += len(tokens)
+
+    def _admit_gather(self, slot: int, sid: str, tokens: np.ndarray,
+                      cached_hit: bool) -> None:
+        """Reference path: gather parked blocks into the contiguous
+        per-slot cache (an O(context-bytes) resume copy)."""
         resumed = self.pool.resume(sid) if cached_hit else None
         if resumed is not None:
             k, v, n = resumed
+            self.resume_copy_bytes += self.pool.session_bytes(sid)
             delta = tokens[n:]
             self.pool.free_session(sid)
             if len(delta):
@@ -160,14 +250,14 @@ class Engine:
             self.prefill_tokens += len(tokens)
             self.regen_tokens += len(tokens)
             self._write_slot(slot, k, v, len(tokens))
-        self.slots[slot].session_id = sid
-        return slot
 
     def decode(self, slot_tokens: Dict[int, int], n_steps: int = 1,
                greedy: bool = True) -> Dict[int, List[int]]:
         """Run `n_steps` batched decode steps for the given slots.
         slot_tokens: {slot: next input token id}.  Returns generated ids
         per slot."""
+        if self.paged:
+            return self._decode_paged(slot_tokens, n_steps)
         out: Dict[int, List[int]] = {s: [] for s in slot_tokens}
         cur = dict(slot_tokens)
         for _ in range(n_steps):
@@ -187,26 +277,77 @@ class Engine:
             self.decode_steps += 1
         return out
 
+    def _decode_paged(self, slot_tokens: Dict[int, int],
+                      n_steps: int) -> Dict[int, List[int]]:
+        """Batched decode attending directly over pool block tables.
+        Each step appends the new K/V into the tail block on device;
+        idle batch rows carry an out-of-range append sentinel so they
+        write nowhere."""
+        out: Dict[int, List[int]] = {s: [] for s in slot_tokens}
+        cur = dict(slot_tokens)
+        pool = self.pool
+        sentinel = pool.total_blocks
+        for _ in range(n_steps):
+            tok = np.zeros((self.n_slots, 1), np.int32)
+            pos = np.zeros((self.n_slots,), np.int32)
+            tables = np.zeros((self.n_slots, self.max_nb), np.int32)
+            ablk = np.full((self.n_slots,), sentinel, np.int32)
+            aoff = np.zeros((self.n_slots,), np.int32)
+            for s, t in cur.items():
+                sid = self.slots[s].session_id
+                pool.ensure_tail_room(sid)
+                tok[s, 0] = t
+                pos[s] = self.slots[s].length
+                tbl = pool.tables[sid]
+                tables[s, :len(tbl)] = tbl
+                ablk[s], aoff[s] = pool.tail_slot(sid)
+            logits, pool.k_pool, pool.v_pool = self._jit_paged_decode(
+                self.params, jnp.asarray(tok), pool.k_pool, pool.v_pool,
+                jnp.asarray(tables), jnp.asarray(pos),
+                jnp.asarray(ablk), jnp.asarray(aoff))
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+            for s in cur:
+                pool.append_token(self.slots[s].session_id)
+                self.slots[s].length += 1
+                out[s].append(int(nxt[s]))
+                cur[s] = int(nxt[s])
+            self.decode_steps += 1
+        return out
+
     def park_session(self, sid: str) -> bool:
-        """Session pauses for a tool call: move its slot KV to the pool."""
+        """Session pauses for a tool call.  Paged mode: metadata-only —
+        the blocks already live in the pool, parking just flips the
+        session from resident to parked accounting (on False the slot
+        keeps its binding so ``release_session`` still frees the
+        blocks).  Gather mode: copy the slot KV into pool blocks."""
         slot = next((i for i, s in enumerate(self.slots)
                      if s.session_id == sid), None)
         if slot is None:
             return False
+        if self.paged:
+            if not self.pool.park_resident(sid):
+                return False
+            self.slots[slot] = SlotState()
+            return True
         n = self.slots[slot].length
         k = self.cache["k"][:, slot]
         v = self.cache["v"][:, slot]
         ok = self.pool.park(sid, k, v, n)
+        if ok:
+            self.park_copy_bytes += self.pool.session_bytes(sid)
         self.slots[slot] = SlotState()
         return ok
 
     def release_session(self, sid: str) -> bool:
         """Free a session's slot WITHOUT parking its KV (task finished:
-        nothing will resume, pooling the blocks would be a wasted copy)."""
+        nothing will resume).  In paged mode this returns the resident
+        blocks to the free list — still metadata-only."""
         slot = next((i for i, s in enumerate(self.slots)
                      if s.session_id == sid), None)
         if slot is None:
             return False
+        if self.paged and sid in self.pool.resident:
+            self.pool.free_session(sid)
         self.slots[slot] = SlotState()
         return True
 
@@ -215,7 +356,8 @@ class Engine:
                                                     jnp.ndarray, int]]:
         """Gather a parked session's KV to contiguous (L, n, K, dh)
         WITHOUT freeing its blocks — the transport half of a pool-to-pool
-        copy (work-steal migration, speculative prefetch)."""
+        copy (work-steal migration, speculative prefetch).  Only the
+        owned blocks are copied."""
         return self.pool.resume(sid)
 
     def import_kv(self, sid: str, k: jnp.ndarray, v: jnp.ndarray,
@@ -223,9 +365,18 @@ class Engine:
         """Land an exported KV prefix into this engine's pool.  Returns
         False when the pool has no room (caller evicts and retries, or
         abandons the copy)."""
-        return self.pool.park(sid, k, v, n_tokens)
+        ok = self.pool.park(sid, k, v, n_tokens)
+        if ok:
+            self.migration_copy_bytes += self.pool.session_bytes(sid)
+        return ok
 
     def evict_session(self, sid: str) -> None:
+        """Policy eviction of parked blocks.  A resident session's
+        blocks are pinned by its slot (mirroring gather mode, where a
+        resumed session holds no pool blocks at all): no-op until the
+        slot releases them."""
+        if self.paged and sid in self.pool.resident:
+            return
         self.pool.free_session(sid)
 
     def fail(self) -> List[str]:

@@ -235,12 +235,14 @@ class ServingRuntime:
                  fault_plan: Optional[Sequence[Tuple[float, str,
                                                      int]]] = None,
                  straggler_slowdown: float = 4.0,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None,
+                 paged: bool = True):
         self.cfg = cfg
         self.params = params
         self.engines = engines if engines is not None else [
             Engine(cfg, params, n_slots=n_slots, max_len=max_len,
-                   pool_blocks=pool_blocks) for _ in range(n_workers)]
+                   pool_blocks=pool_blocks, paged=paged)
+            for _ in range(n_workers)]
         self.n_workers = len(self.engines)
         self.n_slots = self.engines[0].n_slots
         pool = self.engines[0].pool
@@ -1025,7 +1027,8 @@ class ServingRuntime:
         eng = Engine(self.cfg, self.params, n_slots=ref.n_slots,
                      max_len=ref.max_len,
                      pool_blocks=ref.pool.num_blocks,
-                     block_size=ref.pool.block, env=ref.env)
+                     block_size=ref.pool.block, env=ref.env,
+                     paged=ref.paged)
         self.engines.append(eng)
         w = self.co.add_worker(self.ev.now)
         self.queues.append(SessionQueue())
@@ -1049,6 +1052,15 @@ class ServingRuntime:
             "decode_steps": sum(e.decode_steps for e in self.engines),
             "coordinator_hits": self.co.cache_hits,
             "coordinator_misses": self.co.cache_misses,
+            # device bytes moved by park/resume/migration; paged mode's
+            # park/resume are metadata-only so the first two stay 0.
+            # (stats-only: summarize() stays byte-pinned either way)
+            "park_copy_bytes": sum(e.park_copy_bytes
+                                   for e in self.engines),
+            "resume_copy_bytes": sum(e.resume_copy_bytes
+                                     for e in self.engines),
+            "migration_copy_bytes": sum(e.migration_copy_bytes
+                                        for e in self.engines),
         }
 
     def summarize(self) -> dict:
@@ -1134,7 +1146,7 @@ class ServingRuntime:
             if eng.pool.tables:
                 bad.append(f"engine {w} leaked blocks for "
                            f"{sorted(eng.pool.tables)[:5]}")
-            if len(set(eng.pool.free)) != eng.pool.num_blocks:
+            if len(set(eng.pool.free)) != eng.pool.total_blocks:
                 bad.append(f"engine {w} free list corrupt")
             if self.co.pools[w].entries:
                 bad.append(f"engine {w} pool metadata not empty")
@@ -1148,9 +1160,12 @@ class ServingRuntime:
         """Mid-run cross-check: every engine's real parked sessions must
         be a subset of the coordinator's pool entries (a metadata entry
         may transiently outlive its blocks during a resume, never the
-        reverse)."""
+        reverse).  Resident sessions are exempt: a cache-miss admit
+        holds blocks from admit to finish with no coordinator entry
+        until its first park."""
         for w, eng in enumerate(self.engines):
-            extra = set(eng.pool.tables) - set(self.co.pools[w].entries)
+            extra = (set(eng.pool.tables) - set(self.co.pools[w].entries)
+                     - eng.pool.resident)
             if extra:
                 raise RuntimeError(
                     f"engine {w} holds blocks with no pool entry: "

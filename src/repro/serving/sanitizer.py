@@ -109,13 +109,40 @@ class RuntimeSanitizer:
                 errs.append(f"engine {w}: nonempty-index membership "
                             f"{w in rt._nonempty} but queue length "
                             f"{len(rt.queues[w])}")
+            # policy/real mirror: parked blocks ⊆ coordinator metadata.
+            # Resident sessions are exempt — block ownership spans
+            # admit→finish in paged mode, and a cache-miss admit has no
+            # coordinator entry until its first park.
             extra = sorted(set(eng.pool.tables)
-                           - set(rt.co.pools[w].entries))
+                           - set(rt.co.pools[w].entries)
+                           - eng.pool.resident)
             if extra:
                 who = ", ".join(f"{s!r}{self._attempt(s)}"
                                 for s in extra[:5])
                 errs.append(f"engine {w}: parked blocks with no pool "
                             f"metadata entry: {who}")
+            if eng.paged:
+                # resident set == slot owners: a resident session with
+                # no slot leaks headroom blocks forever; a slot owner
+                # not marked resident would count against (and can
+                # exhaust) the parked-policy budget
+                if eng.pool.resident != set(owners):
+                    drift = sorted(eng.pool.resident ^ set(owners))
+                    who = ", ".join(f"{s!r}{self._attempt(s)}"
+                                    for s in drift[:5])
+                    errs.append(f"engine {w}: resident sessions != "
+                                f"slot owners — drift: {who}")
+                for sid, i in sorted(owners.items()):
+                    if eng.pool.lens.get(sid) != eng.slots[i].length:
+                        errs.append(
+                            f"engine {w} slot {i}: block-table length "
+                            f"{eng.pool.lens.get(sid)} != slot length "
+                            f"{eng.slots[i].length}{self._attempt(sid)}")
+                if eng.pool.used_blocks() > eng.pool.num_blocks:
+                    errs.append(
+                        f"engine {w}: parked blocks "
+                        f"{eng.pool.used_blocks()} exceed nominal "
+                        f"capacity {eng.pool.num_blocks}")
             for _, sid in rt.queues[w].snapshot():
                 ses = rt.sessions.get(sid)
                 if ses is None or ses.state != "queued":

@@ -184,6 +184,32 @@ def test_life_leak_slot_family(tmp_path):
     assert "slot" in fs[0].message
 
 
+def test_life_leak_pool_scoped_alloc(tmp_path):
+    """Allocate-at-admit vocabulary: ``*.pool.alloc`` acquires blocks
+    (a path dropping them without free/evict/handoff leaks), while a
+    bare ``list.extend`` never classifies as a block acquire."""
+    fs = _lint(tmp_path, (
+        "class D:\n"
+        "    def admit(self, sid, w):\n"
+        "        self.engines[w].pool.alloc(sid)\n"
+        "        if not self.healthy(w):\n"
+        "            return False\n"            # blocks leak here
+        "        self.engines[w].pool.free_session(sid)\n"
+        "        return True\n"))
+    assert _rules(fs) == ["life-leak"]
+    assert "blocks" in fs[0].message
+    assert not _lint(tmp_path, (
+        "class D:\n"
+        "    def gather(self, items):\n"
+        "        out = []\n"
+        "        for it in items:\n"
+        "            out.extend(it)\n"
+        "            if not it:\n"
+        "                return None\n"
+        "        self.pool.free_session('x')\n"
+        "        return out\n"), "ok.py")
+
+
 GUARD_SRC = """\
 class D:
     def _on_step_done(self, sid, attempt=-1):
