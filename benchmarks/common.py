@@ -19,6 +19,10 @@ from repro.cluster.perf import PerfModel
 from repro.cluster.simulator import ClusterSim, SimPolicy, summarize
 from repro.cluster.workload import burstgpt_workload, swebench_workload, \
     webarena_workload
+# repo-wide percentile convention (xs[min(n-1, int(p*n))]) and the
+# {n, mean, p50, p99, max} latency rollup — one home (repro.obs.export)
+# so summarize(), the benches, and report() agree digit-for-digit
+from repro.obs.export import latency_summary, percentile  # noqa: F401
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

@@ -1,21 +1,57 @@
 """Figure 1: (a) time-regenerating breakdown, (b) memory utilization,
-(c) end-to-end latency normalized to inference-only ideal."""
+(c) end-to-end latency normalized to inference-only ideal — plus the
+span-level per-phase TCT decomposition (queue_wait / prefill / resume /
+decode / tool_gap) from a traced simulator run per baseline, the
+SAGA-vs-request-level A/B the paper's Fig. 1a tells in aggregate:
+request-level burns its TCT re-prefilling (regeneration is attributed
+to the prefill phase, backlog wait included), SAGA replaces it with
+cheap delta-resume.
+
+    PYTHONPATH=src:. python benchmarks/fig1_breakdown.py
+"""
 from __future__ import annotations
 
+import sys
 import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from repro.cluster import baselines as B
+from repro.cluster.simulator import ClusterSim
+from repro.obs.export import report
 
-from benchmarks.common import emit, mean_std, run_seeds, save_json
+from benchmarks.common import (N_WORKERS, emit, mean_std, run_seeds,
+                               save_json, workload)
+
+N_TASKS = 100
+BASELINES = ["vllm", "vllm_apc", "saga"]
+
+
+def traced_phase_breakdown(name: str) -> dict:
+    """One traced run per baseline: the span tree decomposes each
+    task's completion time into phases; tracing is read-only, so this
+    is the same schedule fig1a/b/c aggregate."""
+    sim = ClusterSim(workload("swebench", N_TASKS, seed=0),
+                     B.ALL_BASELINES[name](), n_workers=N_WORKERS,
+                     seed=0, trace=True)
+    sim.run(horizon_s=86400)
+    sim.check_conservation()
+    sim.tracer.check_closed()
+    rep = report(sim.tracer)
+    return {"phase_totals_s": rep["phase_totals_s"],
+            "phase_frac": rep["phase_frac"],
+            "ttft_on_resume": rep["ttft_on_resume"],
+            "tct": rep["tct"]}
 
 
 def main():
     t0 = time.time()
     res = {}
-    for name in ["vllm", "vllm_apc", "saga"]:
-        res[name] = run_seeds(B.ALL_BASELINES[name], "swebench", 200,
+    for name in BASELINES:
+        res[name] = run_seeds(B.ALL_BASELINES[name], "swebench", N_TASKS,
                               seeds=(0, 1))
-    wall = time.time() - t0
     out = {}
     for name, r in res.items():
         regen, _ = mean_std(r["regen_time_frac"])
@@ -24,20 +60,31 @@ def main():
         ideal, _ = mean_std(r["ideal_mean"])
         out[name] = {"regen_frac": regen, "mem_util": mem,
                      "tct_over_ideal": tct / ideal}
+    phases = {name: traced_phase_breakdown(name) for name in BASELINES}
+    for name in BASELINES:
+        out[name]["phase_breakdown"] = phases[name]
+    wall = time.time() - t0
     save_json("fig1_breakdown", out)
-    emit("fig1a/regen_frac", wall / 3,
+    emit("fig1a/regen_frac", wall / 4,
          f"vllm={out['vllm']['regen_frac']:.2f} (paper .38) "
          f"apc={out['vllm_apc']['regen_frac']:.2f} (paper .22) "
          f"saga={out['saga']['regen_frac']:.2f} (paper .08)")
-    emit("fig1b/mem_util", wall / 3,
+    emit("fig1b/mem_util", wall / 4,
          f"vllm={out['vllm']['mem_util']:.2f} (paper .42) "
          f"apc={out['vllm_apc']['mem_util']:.2f} (paper .59) "
          f"saga={out['saga']['mem_util']:.2f} (paper .71)")
-    emit("fig1c/tct_over_ideal", wall / 3,
+    emit("fig1c/tct_over_ideal", wall / 4,
          f"vllm={out['vllm']['tct_over_ideal']:.1f}x "
          f"apc={out['vllm_apc']['tct_over_ideal']:.1f}x "
          f"saga={out['saga']['tct_over_ideal']:.1f}x "
          f"(paper 6.0/3.5/1.5 vs inference-only)")
+    vf, sf = phases["vllm"]["phase_frac"], phases["saga"]["phase_frac"]
+    emit("fig1d/phase_frac", wall / 4,
+         f"vllm: prefill={vf.get('prefill', 0.0):.3f} "
+         f"decode={vf.get('decode', 0.0):.3f} | "
+         f"saga: prefill={sf.get('prefill', 0.0):.3f} "
+         f"resume={sf.get('resume', 0.0):.3f} "
+         f"decode={sf.get('decode', 0.0):.3f}")
 
 
 if __name__ == "__main__":

@@ -66,7 +66,10 @@ from repro.models import lm
 from repro.serving.runtime import (AgentRequest, RuntimePerf,
                                    ServingRuntime)
 
-from benchmarks.common import emit, save_fingerprint, save_json
+from repro.obs.export import chrome_trace, report
+
+from benchmarks.common import (emit, percentile, save_fingerprint,
+                               save_json)
 
 N_WORKERS = 2
 N_SLOTS = 6
@@ -148,8 +151,7 @@ def run_ab(smoke: bool) -> dict:
             "prefill_tokens": base_eng["prefill_tokens"],
             "decode_rounds": base_eng["decode_steps"],
             "tct_mean": sum(base_tcts) / len(base_tcts),
-            "tct_p99": base_tcts[min(len(base_tcts) - 1,
-                                     int(0.99 * len(base_tcts)))],
+            "tct_p99": percentile(base_tcts, 0.99),
             "makespan": max(s.finished_at for s in base_done),
         },
         "reqlevel_wall_s": base_wall,
@@ -296,6 +298,40 @@ def run_paged_gather_ab(cfg, params) -> dict:
     return out
 
 
+def run_traced(cfg, params, expect_summary) -> dict:
+    """Observability leg: the clean SAGA pass re-run with the span
+    tracer on.  Tracing is read-only by contract, so the traced
+    summary must be byte-identical to the untraced one from
+    ``run_ab``; every span must close; and the Perfetto trace +
+    per-phase TCT decomposition are saved for CI's artifact upload."""
+    reqs = _sessions(smoke=True)
+    rt = ServingRuntime(cfg, params, n_workers=N_WORKERS,
+                        saga=SAGAConfig(), n_slots=N_SLOTS,
+                        max_len=MAX_LEN, pool_blocks=POOL_BLOCKS,
+                        seed=SEED, perf=PERF, trace=True)
+    t0 = time.time()
+    for r in reqs:
+        rt.submit(r)
+    rt.run()
+    wall = time.time() - t0
+    rt.check_conservation()
+    if repr(rt.summarize()) != repr(expect_summary):
+        raise AssertionError(
+            "traced summary diverged from untraced — tracing perturbed "
+            "the schedule, violating the zero-perturbation contract")
+    rt.tracer.check_closed()
+    save_json("serve_bench_trace", chrome_trace(rt.tracer,
+                                                rt.obs_metrics))
+    rep = report(rt.tracer)
+    frac = rep["phase_frac"]
+    emit("serve_traced", wall,
+         f"spans={len(rt.tracer.spans)} "
+         f"prefill={frac.get('prefill', 0.0):.3f} "
+         f"decode={frac.get('decode', 0.0):.3f} "
+         f"round_p99={rep['round_latency']['p99']:.4f}")
+    return rep
+
+
 def _fingerprint() -> str:
     """Deterministic SAGA-run summaries (fresh engines, fixed seed): the
     byte-identity contract compared across runs and processes, covering
@@ -341,9 +377,11 @@ def smoke() -> None:
     chaos = run_chaos(cfg, params)
     pre = run_preemption_ab(cfg, params)
     pg = run_paged_gather_ab(cfg, params)
+    rep = run_traced(cfg, params, out["saga"])
     out["chaos"] = chaos
     out["preemption"] = pre
     out["paged_vs_gather"] = pg
+    out["trace_report"] = rep
     save_json("serve_bench_smoke", out)
     a = _fingerprint()
     assert a == _fingerprint(), "same-process summaries diverged"
@@ -372,7 +410,8 @@ def smoke() -> None:
           f"{pg['gather_park_copy_bytes']}/"
           f"{pg['gather_resume_copy_bytes']} bytes "
           f"(round delta {pg['round_latency_delta_us']:+.0f}us); "
-          f"determinism green")
+          f"traced run byte-identical ({rep['span_counts']['session']} "
+          f"session span trees closed); determinism green")
 
 
 def main() -> None:

@@ -7,11 +7,13 @@ import random
 import time
 
 from repro.cluster import baselines as B
+from repro.cluster.simulator import ClusterSim, summarize
 from repro.core.afs import AFSScheduler, TaskProgress
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.core.aeg import PatternInferencer
 
-from benchmarks.common import emit, mean_std, run_seeds, save_json
+from benchmarks.common import (N_WORKERS, emit, mean_std, run_seeds,
+                               save_json, workload)
 
 
 def time_coordinator_cycle(n_workers=64, n_tenants=32, n_sessions=512,
@@ -68,11 +70,47 @@ def time_aeg_construction(iters=300):
     return samples
 
 
+def time_trace_overhead(n_tasks=150):
+    """Span-tracer overhead: the same identical-seed simulation run
+    untraced and traced.  The zero-perturbation contract (summaries
+    byte-identical) is asserted here on every bench run, and the
+    recording cost itself becomes a table row."""
+    walls, summaries, n_spans = {}, {}, 0
+    # two timed repetitions per variant, best-of taken: the first
+    # repetition pays allocator/caches warmup and would otherwise make
+    # the untraced-first ordering look slower than tracing itself
+    for rep in range(2):
+        for traced in (False, True):
+            sim = ClusterSim(workload("swebench", n_tasks, seed=0),
+                             B.saga(), n_workers=N_WORKERS, seed=0,
+                             trace=traced)
+            t0 = time.perf_counter()
+            sim.run(horizon_s=86400)
+            wall = time.perf_counter() - t0
+            walls[traced] = min(walls.get(traced, wall), wall)
+            summaries[traced] = repr(summarize(sim))
+            if traced:
+                sim.tracer.check_closed()
+                n_spans = len(sim.tracer.spans)
+    if summaries[False] != summaries[True]:
+        raise AssertionError("tracing perturbed the schedule — traced "
+                             "and untraced summaries diverged")
+    return {
+        "untraced_s": walls[False],
+        "traced_s": walls[True],
+        "overhead_frac": walls[True] / max(walls[False], 1e-9) - 1.0,
+        "n_spans": n_spans,
+        "us_per_span": 1e6 * (walls[True] - walls[False])
+            / max(n_spans, 1),
+    }
+
+
 def main():
     t0 = time.time()
     cyc = time_coordinator_cycle()
     afs = time_afs()
     aeg = time_aeg_construction()
+    trace = time_trace_overhead()
     sim = run_seeds(B.saga, "swebench", 150, seeds=(0,))
     migr, _ = mean_std(sim["migrations_per_task"])
     out = {
@@ -83,6 +121,7 @@ def main():
         "aeg_ms": {"mean": sum(aeg) / len(aeg),
                    "p95": aeg[int(0.95 * len(aeg))]},
         "migrations_per_task": migr,
+        "trace_overhead": trace,
     }
     save_json("table7_overhead", out)
     wall = time.time() - t0
@@ -96,6 +135,11 @@ def main():
          f"mean={out['aeg_ms']['mean']:.3f}ms (paper 45.2ms w/ parsing)")
     emit("table7/migrations_per_task", wall / 4,
          f"{migr:.2f} (paper 2.3, migration 230ms/890ms modeled)")
+    emit("table7/trace_overhead", trace["traced_s"],
+         f"{trace['overhead_frac'] * 100:+.1f}% wall over untraced, "
+         f"{trace['n_spans']} spans "
+         f"({trace['us_per_span']:.1f}us/span), summaries "
+         "byte-identical")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ from repro.cluster import baselines as B
 from repro.cluster.simulator import ClusterSim, summarize
 from repro.cluster.workload import (swebench_retry_programs,
                                     webarena_branch_programs)
+from repro.obs.export import report
 
 from benchmarks.common import emit, save_fingerprint, save_json
 
@@ -50,18 +51,23 @@ def _mix(n_each: int, retry_p: float = 0.3):
             webarena_branch_programs(n_programs=n_each, seed=SEED))
 
 
-def _run(policy, n_each: int, n_workers: int):
+def _run(policy, n_each: int, n_workers: int, trace: bool = False):
     sim = ClusterSim(_mix(n_each), policy, n_workers=n_workers,
-                     seed=SEED)
+                     seed=SEED, trace=trace)
     sim.run(horizon_s=7.2e6)
     sim.check_conservation()
     return sim, summarize(sim)
 
 
 def run_ab(n_each: int = 24, n_workers: int = 8) -> dict:
+    # the saga leg runs traced: tracing is read-only (the fingerprint
+    # below stays an untraced twin, and the traced/untraced summary
+    # byte-identity is serve_bench's + tests/test_obs.py's gate), and
+    # its span tree gives the per-phase TCT decomposition for free
     t0 = time.time()
-    saga_sim, saga = _run(B.saga(), n_each, n_workers)
+    saga_sim, saga = _run(B.saga(), n_each, n_workers, trace=True)
     saga_wall = time.time() - t0
+    saga_sim.tracer.check_closed()
     t0 = time.time()
     _, base = _run(B.vllm(), n_each, n_workers)
     base_wall = time.time() - t0
@@ -79,12 +85,18 @@ def run_ab(n_each: int = 24, n_workers: int = 8) -> dict:
     if base["cache_hit_rate"] != 0.0:
         raise AssertionError("request-level baseline hit cache")
 
+    rep = report(saga_sim.tracer)
     out = {
         "n_programs": 2 * n_each,
         "n_workers": n_workers,
         "retry_edges_taken": retries,
         "steps_executed": sum(len(p) for p in paths),
         "saga": saga,
+        "saga_phase_breakdown": {
+            "phase_totals_s": rep["phase_totals_s"],
+            "phase_frac": rep["phase_frac"],
+            "ttft_on_resume": rep["ttft_on_resume"],
+        },
         "reqlevel": base,
         "regen_reduction_x": base["regen_tokens_total"]
             / max(saga["regen_tokens_total"], 1e-9),
@@ -98,6 +110,12 @@ def run_ab(n_each: int = 24, n_workers: int = 8) -> dict:
     emit("workflow_ab", saga_wall + base_wall,
          f"regen_reduction={out['regen_reduction_x']:.2f}x "
          f"tct_speedup={out['tct_speedup_x']:.2f}x")
+    frac = rep["phase_frac"]
+    emit("workflow_phase_breakdown", saga_wall,
+         f"prefill={frac.get('prefill', 0.0):.3f} "
+         f"resume={frac.get('resume', 0.0):.3f} "
+         f"decode={frac.get('decode', 0.0):.3f} "
+         f"tool_gap={frac.get('tool_gap', 0.0):.3f}")
     return out
 
 

@@ -19,6 +19,7 @@ catches at end-of-run:
   inflight          ``X.inflight[sid] = ...``   ``X.inflight.pop`` /
                                                 ``del X.inflight[...]``
   idle-set          ``on_worker_busy``          ``on_worker_idle``
+  span              ``*tracer*.begin``          ``*tracer*.end``
   ================  ==========================  =========================
 
 Paged serving moved block acquisition from park-time to admit-time
@@ -43,6 +44,15 @@ Rules:
     ``generation``) but never test it: stale events from a cancelled
     attempt or a failed engine incarnation would then mutate fresh
     state.
+  * ``life-span`` — the ``span`` family under the ``life-leak``
+    analysis, reported under its own rule id: a ``tracer.begin(...)``
+    on a path that exits without ``tracer.end(...)`` or a registered
+    handoff is a span leak — ``Tracer.check_closed()`` would only
+    catch it at end-of-run, like a leaked slot.  ``begin``/``end`` are
+    far too generic to match bare, so the family is receiver-scoped:
+    calls classify only through a chain passing a ``tracer`` name
+    (``self.tracer.begin(...)``), mirroring the pool-scoped alloc
+    names.
 """
 from __future__ import annotations
 
@@ -68,6 +78,15 @@ FAMILIES: Dict[str, Dict[str, Set[str]]] = {
     "idle-set": {
         "acquire": {"on_worker_busy"},
         "release": {"on_worker_idle"},
+    },
+    # virtual-time span tracer (repro.obs.tracer): ``begin``/``end``
+    # are too generic to match bare, so the optional "receivers" key
+    # scopes classification to calls whose receiver chain passes a
+    # ``tracer`` name — self.tracer.begin(...), sim.tracer.end(...)
+    "span": {
+        "acquire": {"begin"},
+        "release": {"end"},
+        "receivers": {"tracer"},
     },
 }
 
@@ -146,6 +165,11 @@ class _NodeActions:
                     and _chain_mentions(sub.func.value, _JOIN_ATTRS):
                 self.handoff = True
             for fam, names in FAMILIES.items():
+                recv = names.get("receivers")
+                if recv is not None and not (
+                        isinstance(sub.func, ast.Attribute)
+                        and _chain_mentions(sub.func.value, recv)):
+                    continue
                 if callee in names["acquire"]:
                     self.acquires.add(fam)
                 if callee in names["release"]:
@@ -213,9 +237,10 @@ class LifecycleChecker:
                 rel = " / ".join(sorted(FAMILIES[fam]["release"])) \
                     if fam in FAMILIES \
                     else "inflight.pop / del inflight[...]"
+                rule = "life-span" if fam == "span" else "life-leak"
                 self.findings.append(Finding(
                     self.path, node.line, node.stmt.col_offset,
-                    "life-leak",
+                    rule,
                     f"'{fn.name}' acquires {fam} here but the path "
                     f"exiting at line {exit_line} neither releases it "
                     f"({rel}) nor hands it off to a scheduled "

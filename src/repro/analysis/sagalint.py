@@ -35,7 +35,7 @@ import tokenize
 from pathlib import Path
 from typing import Dict, Iterable, List, Sequence, Tuple
 
-SCHED_PKGS = {"core", "cluster", "serving", "workflow"}
+SCHED_PKGS = {"core", "cluster", "obs", "serving", "workflow"}
 
 RULES: Dict[str, str] = {
     "det-hash": "builtin hash() on non-ints (use the FNV-1a helpers)",
@@ -48,6 +48,8 @@ RULES: Dict[str, str] = {
                  "release or handoff",
     "life-guard": "_on_* event handler ignoring its attempt/generation "
                   "stamp",
+    "life-span": "CFG path with a tracer.begin(...) that reaches exit "
+                 "without tracer.end(...) or handoff",
     "pragma": "malformed suppression pragma (missing reason)",
     "pragma-unused": "pragma that suppresses nothing",
     "parse-error": "file does not parse",

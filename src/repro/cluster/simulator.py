@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -99,6 +100,8 @@ except ImportError:          # pragma: no cover - numpy ships with repo
 
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.cluster.perf import PerfModel
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import ROOT, as_tracer
 from repro.workflow.program import WorkflowInstance, as_instance
 
 INF = float("inf")
@@ -288,7 +291,8 @@ class ClusterSim:
                  seed: int = 0,
                  fault_plan: Optional[Sequence[Tuple[float, str, int]]] = None,
                  straggler: Optional[object] = None,
-                 straggler_slowdown: float = 4.0):
+                 straggler_slowdown: float = 4.0,
+                 trace=None):
         # one submission API (repro.workflow): legacy Tasks compile to
         # scripted AgentPrograms (byte-identical execution), explicit
         # graph / dynamic programs resolve their branches as they run
@@ -347,6 +351,28 @@ class ClusterSim:
         self.straggler = straggler
         self.straggler_slowdown = straggler_slowdown
         self._slow: Dict[int, float] = {}
+        # virtual-time span tracer + metrics registry (repro.obs):
+        # read-only — a traced run's summarize() is byte-identical to
+        # the untraced run and the trace bytes are byte-identical
+        # across PYTHONHASHSEED (docs/OBSERVABILITY.md).  ``trace``
+        # accepts True (fresh tracer) or a Tracer instance; the
+        # simulator's own TaskMetrics dict keeps the ``metrics`` name.
+        if trace is None:
+            # sagalint: ok(det-env) trace toggles recording only, never a scheduling decision — replay is unaffected
+            trace = os.environ.get("SAGA_TRACE", "") not in ("", "0")
+        self.tracer = as_tracer(trace)
+        self.obs_metrics = MetricsRegistry() if self.tracer is not None \
+            else None
+        # per-task open-span ids keyed by role ("session" / "step" /
+        # "queue" / "pf" / "dec" / "gap" / "migr"); plain string keys,
+        # never id() — part of the determinism contract
+        self._tr_open: Dict[str, Dict[str, int]] = {}
+        # metric sampling is decimated to every 10th epoch tick (1 s of
+        # virtual time) with per-worker gauge handles cached — sampling
+        # the full worker set at the 100 ms tick rate dominated traced
+        # wall time (table7's trace-overhead row measures this)
+        self._obs_tick = 0
+        self._obs_worker_g: list = []
         self._started = False
         # all queues start empty: seed the indexed idle set at t=0
         for w in range(n_workers):
@@ -442,6 +468,32 @@ class ClusterSim:
             f *= self.straggler.factor(w)
         return f
 
+    # -- tracing helpers (no-ops when tracing is off) ---------------------
+    def _tr_begin(self, tid: str, key: str, name: str,
+                  parent_key: Optional[str] = None,
+                  t: Optional[float] = None, **meta) -> None:
+        if self.tracer is None:
+            return
+        o = self._tr_open.setdefault(tid, {})
+        parent = o.get(parent_key, ROOT) if parent_key else ROOT
+        o[key] = self.tracer.begin(f"session/{tid}", name,
+                                   self.now if t is None else t,
+                                   parent=parent, **meta)
+
+    def _tr_end(self, tid: str, key: str, status: str = "ok",
+                t: Optional[float] = None, **meta) -> None:
+        if self.tracer is None:
+            return
+        o = self._tr_open.get(tid)
+        if o is None or key not in o:
+            return
+        self.tracer.end(o.pop(key), self.now if t is None else t,
+                        status=status, **meta)
+
+    def _tr_instant(self, track: str, name: str, **meta) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(track, name, self.now, **meta)
+
     # -- queue transitions (the indexed idle/victim bookkeeping) ----------
     def _queue_pop(self, w: int) -> Optional[StepJob]:
         job = self.workers[w].queue.pop()
@@ -520,6 +572,7 @@ class ClusterSim:
             task_id, task.tenant, task.arrival_s,
             ideal_s=self._ideal_time(task),
             steps=len(task.nominal_steps()))
+        self._tr_begin(task_id, "session", "session", tenant=task.tenant)
         cap = self.policy.admission_max_tasks
         if cap is not None and self.active_tasks >= cap:
             self.admission_queue.append(task)
@@ -577,10 +630,23 @@ class ClusterSim:
         immediately when a slot + KV headroom are free.  A dead
         explicit target falls back to routing; if no worker is alive
         the step parks in the orphan buffer until recover/scale-up."""
+        tid = job.task.task_id
+        if self.tracer is not None \
+                and "step" not in self._tr_open.get(tid, {}):
+            # first placement of this step opens the step span; fault
+            # requeues and migration landings re-enter with it open
+            self._tr_begin(tid, "step", "step", parent_key="session",
+                           step=job.step_idx)
         w = worker if worker is not None and self.workers[worker].alive \
             else self._route(job.task)
         if not self.workers[w].alive:
             self._orphans.append(job)
+            # the whole cluster is down: the wait still counts as queue
+            # time (worker=-1); a pre-existing queue span keeps running
+            if self.tracer is not None \
+                    and "queue" not in self._tr_open.get(tid, {}):
+                self._tr_begin(tid, "queue", "queue_wait",
+                               parent_key="step", worker=-1)
             return
         job.worker = w
         job.cancelled = False
@@ -590,6 +656,10 @@ class ClusterSim:
             self._load_delta(w, 1)
             self._start_step(job)
         else:
+            # a re-enqueue (fault drain) closes the old wait first
+            self._tr_end(tid, "queue", status="requeued")
+            self._tr_begin(tid, "queue", "queue_wait",
+                           parent_key="step", worker=w)
             self._queue_push(w, job)
 
     def _start_step(self, job: StepJob) -> None:
@@ -636,6 +706,23 @@ class ClusterSim:
             job, attempt, w, self.now, done, kv_bytes, busy,
             decode_s=decode_dur, regen_s_charged=regen / rate,
             regen_tokens=regen)
+        # the prefill span starts at admission and so absorbs the serial
+        # prefill pipeline's backlog wait (pipeline_wait in meta) — that
+        # wait is caused by prefill/regeneration load, which is where a
+        # TCT decomposition should attribute it.  The decode span is
+        # future-dated (pf end); a cancellation landing earlier clamps
+        # to a zero-duration span rather than a negative one.
+        self._tr_end(task.task_id, "queue")
+        self._tr_begin(task.task_id, "pf",
+                       "resume" if hit else "prefill", parent_key="step",
+                       worker=w, attempt=attempt,
+                       tokens=float(pf_tokens), regen=float(regen),
+                       pipeline_wait=pf_start - self.now)
+        self._tr_begin(task.task_id, "dec", "decode", parent_key="step",
+                       t=pf_start + pf_dur, worker=w, attempt=attempt)
+        if self.obs_metrics is not None:
+            self.obs_metrics.histogram("prefill_s").observe(
+                self.now, pf_dur)
         self._push(done, "llm_done", (task.task_id, i, w, attempt))
 
     def _on_llm_done(self, task_id: str, i: int, w: int,
@@ -644,6 +731,9 @@ class ClusterSim:
         if rec is None or rec.attempt != attempt:
             return   # stale: the step was cancelled by a worker fault
         del self.inflight[task_id]
+        self._tr_end(task_id, "pf", t=rec.finish - rec.decode_s)
+        self._tr_end(task_id, "dec", first_token_t=rec.finish
+                     - rec.decode_s)
         task = self.tasks[task_id]
         ws = self.workers[w]
         ws.active -= 1
@@ -671,6 +761,9 @@ class ClusterSim:
             m.finish = self.now
             m.steps = task.n_steps          # actual executed path length
             self.active_tasks -= 1
+            self._tr_end(task_id, "step")
+            self._tr_end(task_id, "session")
+            self._tr_open.pop(task_id, None)
             if self.admission_queue:
                 self._admit(self.admission_queue.pop(0))
             return
@@ -681,6 +774,8 @@ class ClusterSim:
         self.co.on_step_end(task_id, w, ctx_cached, entry_bytes,
                             step.tool, self.now,
                             next_node=task.next_node_hint(i + 1))
+        self._tr_begin(task_id, "gap", "tool_gap", parent_key="step",
+                       tool=step.tool)
         self._push(self.now + step.tool_latency_s, "tool_done",
                    (task_id, i, w))
 
@@ -689,6 +784,8 @@ class ClusterSim:
         step = task.steps[i]
         self.co.on_tool_done(task_id, step.tool, step.tool_latency_s,
                              step.obs_tokens, self.now)
+        self._tr_end(task_id, "gap")
+        self._tr_end(task_id, "step")
         self._enqueue_step(StepJob(task, i + 1, self.now))
 
     def _drain_queue(self, w: int) -> None:
@@ -718,6 +815,10 @@ class ClusterSim:
         return decision
 
     def _on_epoch(self) -> None:
+        if self.obs_metrics is not None:
+            if self._obs_tick % 10 == 0:
+                self._obs_sample()
+            self._obs_tick += 1
         decision = self._epoch_decide()
         if decision is not None:
             vq = self.workers[decision.victim].queue
@@ -730,6 +831,12 @@ class ClusterSim:
                     mig = self.perf.sample_migration_s(self.rng)
                     self.migrations += 1
                     self.metrics[job.task.task_id].migrations += 1
+                    self._tr_end(job.task.task_id, "queue",
+                                 status="stolen")
+                    self._tr_begin(job.task.task_id, "migr", "migration",
+                                   parent_key="step",
+                                   src=decision.victim,
+                                   dst=decision.thief)
                     self.migrating[job.task.task_id] = decision.thief
                     self._push(self.now + mig, "migr_done",
                                (job.task.task_id, job.step_idx,
@@ -744,6 +851,38 @@ class ClusterSim:
                 return
             self._push(self.now + self.perf.epoch_s, "epoch")
 
+    def _obs_sample(self) -> None:
+        """Decimated epoch-tick metric sampling (traced runs only):
+        per-worker queue depth, batch occupancy, in-flight KV bytes and
+        cumulative regeneration seconds, plus cluster memory
+        utilization (same formula as ``_sample_mem``), cached pool
+        bytes, and per-tenant AFS service.  Read-only off structures
+        the scheduler already maintains; the per-worker gauge handles
+        are cached (grown lazily on scale-up) so the hot loop skips the
+        registry's label-key construction."""
+        m = self.obs_metrics
+        now = self.now
+        while len(self._obs_worker_g) < len(self.workers):
+            w = len(self._obs_worker_g)
+            self._obs_worker_g.append((
+                m.gauge("queue_depth", worker=w),
+                m.gauge("batch_occupancy", worker=w),
+                m.gauge("kv_active_bytes", worker=w),
+                m.gauge("regen_s", worker=w)))
+        for w, ws in enumerate(self.workers):
+            gq, gb, gk, gr = self._obs_worker_g[w]
+            gq.set(now, len(ws.queue))
+            gb.set(now, ws.active)
+            gk.set(now, ws.active_kv)
+            gr.set(now, ws.regen_s)
+        m.gauge("pool_bytes_cached").set(now, self.co.pools_used)
+        m.gauge("mem_util").set(
+            now, (self.co.pools_used + self._active_kv_total)
+            / (self.co.capacity * self.n_workers))
+        for name in sorted(self.co.afs.tenants):
+            m.gauge("afs_service_s", tenant=name).set(
+                now, self.co.afs.tenants[name].service_s)
+
     def _on_migr_done(self, task_id: str, step_idx: int, src: int,
                       dst: int) -> None:
         """A stolen session's KV transfer completed.  Validates against
@@ -754,11 +893,14 @@ class ClusterSim:
         self.migrating.pop(task_id, None)
         m = self.metrics.get(task_id)
         if m is None or m.finish >= 0:
+            self._tr_end(task_id, "migr", status="stale")
             return
         job = StepJob(self.tasks[task_id], step_idx, self.now)
         if not self.workers[dst].alive:
+            self._tr_end(task_id, "migr", status="dropped")
             self._enqueue_step(job)          # re-route, cache lost
             return
+        self._tr_end(task_id, "migr")
         self.co.migrate_session(task_id, src, dst, self.now)
         self._enqueue_step(job, worker=dst)
 
@@ -779,6 +921,10 @@ class ClusterSim:
         jobs: List[StepJob] = []
         for tid in victims:
             rec = self.inflight.pop(tid)
+            self._tr_end(tid, "pf", status="cancelled")
+            self._tr_end(tid, "dec", status="cancelled")
+            self._tr_instant(f"worker/{w}", "cancel", task=tid,
+                             attempt=rec.attempt)
             ws.active -= 1
             self._load_delta(w, -1)
             ws.active_kv -= rec.kv_bytes
@@ -801,6 +947,7 @@ class ClusterSim:
         its queued steps on live workers, wipe its KV pool/affinities.
         Nothing completes on a dead node; retried steps pay cache-loss
         regeneration."""
+        self._tr_instant("run", "fault", kind="fail", worker=w)
         ws = self.workers[w]
         if not ws.alive:
             return                           # already down
@@ -824,6 +971,7 @@ class ClusterSim:
             self._enqueue_step(StepJob(job.task, job.step_idx, self.now))
 
     def _on_recover(self, w: int) -> None:
+        self._tr_instant("run", "fault", kind="recover", worker=w)
         if self.workers[w].alive:
             return                           # already up (storm overlap)
         self.workers[w].alive = True
@@ -835,6 +983,8 @@ class ClusterSim:
         self._readmit_orphans()
 
     def _on_scale_up(self, _unused: int = 0) -> None:
+        self._tr_instant("run", "fault", kind="scale_up",
+                         worker=_unused)
         self.co.add_worker(self.now)
         ws = WorkerState()
         self.workers.append(ws)
@@ -852,9 +1002,11 @@ class ClusterSim:
         rates divide by ``straggler_slowdown``).  Steps already in
         flight keep their original finish times — slowdowns hit new
         admissions, like a thermal throttle between batches."""
+        self._tr_instant("run", "fault", kind="slow", worker=w)
         self._slow[w] = self.straggler_slowdown
 
     def _on_heal(self, w: int) -> None:
+        self._tr_instant("run", "fault", kind="heal", worker=w)
         self._slow.pop(w, None)
 
     def _readmit_orphans(self) -> None:

@@ -52,6 +52,16 @@ Architecture map (module -> paper section):
     re-checked after every dispatched event, failing at the first bad
     event with the owning session and attempt named (see
     ``docs/INVARIANTS.md``).
+  * ``repro.obs`` (``SAGA_TRACE=1`` / ``ServingRuntime(trace=True)``)
+    — virtual-time span tracer + metrics registry hooked into the same
+    semantic points on both substrates: per-session span trees
+    (queue_wait / prefill / resume / decode / tool_gap / migration,
+    engine rounds, preempt / cancel / prefetch / fault instants) and
+    epoch-tick gauges (queue depth, KV pool occupancy, AFS deviation).
+    Read-only by contract: traced ``summarize()`` is byte-identical to
+    untraced, trace bytes identical across ``PYTHONHASHSEED``.
+    Exports Perfetto ``trace_event`` JSON, Prometheus text, and the
+    per-phase TCT decomposition (see ``docs/OBSERVABILITY.md``).
 
 Fault / preemption lifecycle (runtime twin of the simulator's
 attempt-stamped registry; ``cluster.faults`` plans drive both

@@ -80,6 +80,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import ROOT, as_tracer
 from repro.serving.engine import Engine
 from repro.serving.events import EventLoop, SessionQueue, _RuntimeQueueView
 from repro.serving.sanitizer import RuntimeSanitizer
@@ -236,7 +238,8 @@ class ServingRuntime:
                                                      int]]] = None,
                  straggler_slowdown: float = 4.0,
                  sanitize: Optional[bool] = None,
-                 paged: bool = True):
+                 paged: bool = True,
+                 trace=None):
         self.cfg = cfg
         self.params = params
         self.engines = engines if engines is not None else [
@@ -302,6 +305,26 @@ class ServingRuntime:
             sanitize = os.environ.get("SAGA_SANITIZE", "") not in ("",
                                                                    "0")
         self._san = RuntimeSanitizer(self) if sanitize else None
+        # virtual-time span tracer + metrics registry (repro.obs):
+        # read-only like the sanitizer — a traced run's summarize() is
+        # byte-identical to the untraced run, and the trace bytes are
+        # byte-identical across PYTHONHASHSEED (docs/OBSERVABILITY.md).
+        # ``trace`` accepts True (fresh tracer) or a Tracer instance.
+        if trace is None:
+            # sagalint: ok(det-env) trace toggles recording only, never a scheduling decision — replay is unaffected
+            trace = os.environ.get("SAGA_TRACE", "") not in ("", "0")
+        self.tracer = as_tracer(trace)
+        self.obs_metrics = MetricsRegistry() if self.tracer is not None \
+            else None
+        # per-session open-span ids keyed by role ("session" / "step" /
+        # "queue" / "phase" / "gap" / "migr"); plain string keys, never
+        # id() — part of the determinism contract
+        self._tr_open: Dict[str, Dict[str, int]] = {}
+        # metric sampling is decimated to every 10th epoch tick (1 s of
+        # virtual time) with per-engine gauge handles cached — same
+        # rationale as the simulator (table7's trace-overhead row)
+        self._obs_tick = 0
+        self._obs_engine_g: List[tuple] = []
         # instrumentation
         self.migrations = 0
         self.prefetch_copies = 0
@@ -322,6 +345,32 @@ class ServingRuntime:
 
     def _load_delta(self, w: int, d: int) -> None:
         self._loadnum[w] += d
+
+    # -- tracing helpers (no-ops when tracing is off) -------------------
+    def _tr_begin(self, sid: str, key: str, name: str,
+                  parent_key: Optional[str] = None,
+                  t: Optional[float] = None, **meta) -> None:
+        if self.tracer is None:
+            return
+        o = self._tr_open.setdefault(sid, {})
+        parent = o.get(parent_key, ROOT) if parent_key else ROOT
+        o[key] = self.tracer.begin(f"session/{sid}", name,
+                                   self.ev.now if t is None else t,
+                                   parent=parent, **meta)
+
+    def _tr_end(self, sid: str, key: str, status: str = "ok",
+                t: Optional[float] = None, **meta) -> None:
+        if self.tracer is None:
+            return
+        o = self._tr_open.get(sid)
+        if o is None or key not in o:
+            return
+        self.tracer.end(o.pop(key), self.ev.now if t is None else t,
+                        status=status, **meta)
+
+    def _tr_instant(self, track: str, name: str, **meta) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(track, name, self.ev.now, **meta)
 
     # -- submission -----------------------------------------------------
     def submit(self, req,
@@ -397,6 +446,7 @@ class ServingRuntime:
                               prefix_tokens=0, aeg=aeg,
                               step_cost_s=step_cost,
                               entry_node=inst.path[0] if inst.path else 0)
+        self._tr_begin(sid, "session", "session", tenant=inst.tenant)
         self._begin_step(sid)
 
     def _begin_step(self, sid: str) -> None:
@@ -404,6 +454,8 @@ class ServingRuntime:
         prompt = ses.inst.rt_step(ses.step_idx)[0]
         ses.ctx.extend(int(t) for t in prompt)
         ses.step_start_len = len(ses.ctx)
+        self._tr_begin(sid, "step", "step", parent_key="session",
+                       step=ses.step_idx)
         self._redispatch(sid)
 
     def _redispatch(self, sid: str) -> None:
@@ -413,6 +465,12 @@ class ServingRuntime:
         if not any(self._alive):
             self.sessions[sid].state = "queued"
             self._orphans.append(sid)
+            # the whole cluster is down: the wait still counts as queue
+            # time (engine=-1); a pre-existing queue span keeps running
+            if self.tracer is not None \
+                    and "queue" not in self._tr_open.get(sid, {}):
+                self._tr_begin(sid, "queue", "queue_wait",
+                               parent_key="step", engine=-1)
             return
         w = self.co.route(sid, self.loads(), self.ev.now)
         self._dispatch_to(sid, w)
@@ -438,6 +496,11 @@ class ServingRuntime:
         ses = self.sessions[sid]
         ses.state = "queued"
         ses.engine = w
+        # a re-enqueue (fault drain, preemption) closes the old wait
+        # before opening the new one; first enqueues no-op the end
+        self._tr_end(sid, "queue", status="requeued")
+        self._tr_begin(sid, "queue", "queue_wait", parent_key="step",
+                       engine=w)
         prio = -self.co.afs.priority(ses.inst.tenant)
         if not self.queues[w]:           # empty -> nonempty transition
             self._nonempty.add(w)
@@ -514,6 +577,12 @@ class ServingRuntime:
         self._load_delta(w, 1)
         pf_s = max(0.0, virt_prefill) * self._speed_factor(w) \
             / self.perf.prefill_tokens_per_s
+        self._tr_end(sid, "queue")
+        self._tr_begin(sid, "phase", "resume" if real_hit else "prefill",
+                       parent_key="step", engine=w, attempt=ses.attempt)
+        if self.obs_metrics is not None:
+            self.obs_metrics.histogram("prefill_s").observe(
+                self.ev.now, pf_s)
         # service accrues as GPU time is actually consumed (prefill here,
         # decode per round) so Thm. 2 deviation sees starvation while it
         # is happening, not at completion granularity
@@ -546,6 +615,13 @@ class ServingRuntime:
             ses.remaining = int(ses.inst.rt_step(ses.step_idx)[1])
             ses.step_outputs.append([])
         ses.next_token = int(ses.ctx[-1])
+        self._tr_end(sid, "phase")
+        self._tr_begin(sid, "phase", "decode", parent_key="step",
+                       engine=w, attempt=attempt)
+        if self.tracer is not None:
+            # flag key alongside span ids: the next round stamps the
+            # first decoded token's time onto the decode span (TTFT)
+            self._tr_open[sid]["ttft_pending"] = 1
         self._active[w].add(sid)
         if not self._round_live[w]:
             self._round_live[w] = True
@@ -588,6 +664,20 @@ class ServingRuntime:
             self.co.afs.note_service(ses.inst.tenant, round_s)
             if ses.remaining == 0:
                 finished.append(sid)
+        if self.tracer is not None:
+            for sid in active:
+                o = self._tr_open.get(sid)
+                if o is not None \
+                        and o.pop("ttft_pending", None) is not None \
+                        and "phase" in o:
+                    self.tracer.note(o["phase"],
+                                     first_token_t=self.ev.now)
+            self.tracer.complete(f"engine/{w}", "round",
+                                 self.ev.now - round_s, self.ev.now,
+                                 engine=w, batch=len(active),
+                                 finished=len(finished))
+            self.obs_metrics.histogram("decode_round_s").observe(
+                self.ev.now, round_s)
         for sid in finished:
             self._active[w].discard(sid)
             self._finish_decode(sid)
@@ -615,6 +705,7 @@ class ServingRuntime:
         w = ses.engine
         eng = self.engines[w]
         self.inflight.pop(sid, None)
+        self._tr_end(sid, "phase")
         prompt, n_out, tool, gap_s = ses.inst.rt_step(ses.step_idx)
         work = self._step_work_s(len(prompt), n_out)
         # a preemption park part-charged this step already; charge only
@@ -648,6 +739,8 @@ class ServingRuntime:
         self._resident[w] -= 1
         self._load_delta(w, -1)
         ses.state = "tool"
+        self._tr_begin(sid, "gap", "tool_gap", parent_key="step",
+                       tool=tool, parked=self.co.pools[w].contains(sid))
         job = self.co.prefetcher.inflight.get(sid)
         if job is not None and job.issued_at == self.ev.now:
             self.ev.schedule(job.ready_at, "prefetch", (sid, w))
@@ -678,6 +771,8 @@ class ServingRuntime:
         eng = self.engines[w]
         self._active[w].discard(sid)
         self.inflight.pop(sid, None)
+        self._tr_end(sid, "phase", status="preempted")
+        self._tr_instant(f"engine/{w}", "preempt", sid=sid)
         # charge the executed part of the step now (prompt prefill +
         # decoded rounds); _finish_decode later charges only the tail
         prompt = ses.inst.rt_step(ses.step_idx)[0]
@@ -729,6 +824,9 @@ class ServingRuntime:
         ses.state = "done"
         ses.finished_at = self.ev.now
         self.n_done += 1
+        self._tr_end(sid, "step")
+        self._tr_end(sid, "session")
+        self._tr_open.pop(sid, None)
         self._drain_queue(w)
 
     def _on_tool_done(self, sid: str) -> None:
@@ -738,11 +836,17 @@ class ServingRuntime:
         prompt, _, tool, gap_s = ses.inst.rt_step(ses.step_idx)
         self.co.on_tool_done(sid, tool, float(gap_s), float(len(prompt)),
                              self.ev.now)
+        self._tr_end(sid, "gap")
+        self._tr_end(sid, "step")
         ses.step_idx += 1
         self._begin_step(sid)
 
     # -- epoch tick: AFS shares + work stealing + preemption ------------
     def _on_epoch(self) -> None:
+        if self.obs_metrics is not None:
+            if self._obs_tick % 10 == 0:
+                self._obs_sample()
+            self._obs_tick += 1
         decision, shares = self.co.epoch_tick(
             self.ev.now, self.loads(), self._queue_views,
             alive=self._alive, victim_candidates=self._nonempty,
@@ -753,6 +857,10 @@ class ServingRuntime:
             ses = self._queue_remove(decision.victim, decision.session_id)
             if ses is not None:
                 ses.state = "migrating"
+                self._tr_end(ses.session_id, "queue", status="stolen")
+                self._tr_begin(ses.session_id, "migr", "migration",
+                               parent_key="step", src=decision.victim,
+                               dst=decision.thief)
                 self.migrating[ses.session_id] = (decision.victim,
                                                   decision.thief)
                 self.migrations += 1
@@ -847,6 +955,41 @@ class ServingRuntime:
         if dev > self.afs_dev_max:
             self.afs_dev_max = dev
 
+    def _obs_sample(self) -> None:
+        """Decimated epoch-tick metric sampling (traced runs only):
+        per-engine queue depth, batch occupancy, KV pool occupancy
+        split parked/resident/free, cumulative regeneration bytes, and
+        the Thm. 2 fair-share deviation/lag.  Read-only off structures
+        the scheduler already maintains; per-engine gauge handles are
+        cached (grown lazily on scale-up) so the hot loop skips the
+        registry's label-key construction."""
+        m = self.obs_metrics
+        now = self.ev.now
+        while len(self._obs_engine_g) < len(self.engines):
+            w = len(self._obs_engine_g)
+            self._obs_engine_g.append((
+                m.gauge("queue_depth", engine=w),
+                m.gauge("batch_occupancy", engine=w),
+                m.gauge("kv_blocks", engine=w, state="parked"),
+                m.gauge("kv_blocks", engine=w, state="resident"),
+                m.gauge("kv_blocks", engine=w, state="free"),
+                m.gauge("regen_bytes", engine=w)))
+        for w, eng in enumerate(self.engines):
+            gq, gb, gp, gr_, gf, gg = self._obs_engine_g[w]
+            gq.set(now, len(self.queues[w]))
+            gb.set(now, len(self._active[w]))
+            parked = eng.pool.used_blocks()
+            gp.set(now, parked)
+            gr_.set(now, eng.pool.physical_used_blocks() - parked)
+            gf.set(now, len(eng.pool.free))
+            gg.set(now, eng.regen_tokens * self.kv_bytes_per_token)
+        targets = self._fair_targets()
+        if targets is not None:
+            m.gauge("afs_deviation_max").set(
+                now, max(abs(srv - tgt) for _, srv, tgt in targets))
+            for name, srv, tgt in targets:
+                m.gauge("afs_lag_s", tenant=name).set(now, tgt - srv)
+
     def _copy_kv(self, sid: str, src: int, dst: int) -> bool:
         """Real pool-to-pool block copy (export, make room, import)."""
         kv = self.engines[src].export_kv(sid)
@@ -870,11 +1013,13 @@ class ServingRuntime:
             return
         ses = self.sessions[sid]
         if ses.state != "migrating":
+            self._tr_end(sid, "migr", status="stale")
             return
         if not self._alive[dst]:
             # thief died while the KV was in transit: drop the copy and
             # re-route to a live engine (the home entry, if the source
             # survives, is still intact for a later resume)
+            self._tr_end(sid, "migr", status="dropped")
             self._redispatch(sid)
             return
         if self.engines[src].has_cache(sid):
@@ -893,6 +1038,7 @@ class ServingRuntime:
             # (§3.1), later steps may still resume the intact home copy
         else:
             self.co.router.set_home(sid, dst)
+        self._tr_end(sid, "migr")
         self._dispatch_to(sid, dst)
 
     def _on_prefetch(self, sid: str, src: int) -> None:
@@ -931,6 +1077,8 @@ class ServingRuntime:
             self.prefetch_copies += 1
             self.prefetch_copy_bytes += \
                 len(ses.ctx) * self.kv_bytes_per_token
+            self._tr_instant(f"engine/{src}", "prefetch", sid=sid,
+                             dst=dst)
         else:
             self.co.drop_entry(sid, dst, count_eviction=False)
 
@@ -939,6 +1087,7 @@ class ServingRuntime:
         """One ``cluster.faults`` plan event on the virtual clock.  The
         same plans drive both substrates: (t, "fail"|"recover"|
         "scale_up"|"slow"|"heal", worker)."""
+        self._tr_instant("run", "fault", kind=kind, engine=w)
         if kind == "fail":
             self._fail_engine(w)
         elif kind == "recover":
@@ -995,6 +1144,8 @@ class ServingRuntime:
         del self.inflight[sid]
         self.cancelled_attempts += 1
         self._active[w].discard(sid)
+        self._tr_end(sid, "phase", status="cancelled")
+        self._tr_instant(f"engine/{w}", "cancel", sid=sid)
         # decode rounds that executed before the crash were real service
         # and stay charged (per-round note_service already saw them —
         # sim semantics: work lost to a crash was still work), but any
@@ -1061,6 +1212,16 @@ class ServingRuntime:
                                      for e in self.engines),
             "migration_copy_bytes": sum(e.migration_copy_bytes
                                         for e in self.engines),
+            # lifecycle counters (steal/migration, prefetch, faults,
+            # preemption) so server.stats() surfaces them per worker —
+            # additive keys only: every consumer reads by name
+            "steals": int(self.co.stealer.steals),
+            "migrations": int(self.migrations),
+            "prefetch_copies": int(self.prefetch_copies),
+            "faults_injected": int(self.faults_injected),
+            "cancelled_attempts": int(self.cancelled_attempts),
+            "preemptions": int(self.preempted),
+            "afs_dev_max": float(self.afs_dev_max),
         }
 
     def summarize(self) -> dict:

@@ -1,0 +1,312 @@
+"""Trace-conservation suite for the observability layer (repro.obs).
+
+Covers the zero-perturbation contract on BOTH substrates: a traced
+run's ``summarize()`` is byte-identical to the untraced run; every
+span the substrate opens is closed (properly nested under its
+session/step parents); span counts reconcile with lifecycle/event
+counts under chaos plans — a cancelled attempt closes its spans with
+``status="cancelled"`` instead of leaking them; and the trace bytes
+themselves are identical across processes with different
+``PYTHONHASHSEED``.  Plus tracer/metrics unit behaviour and the
+``report()``/Chrome-trace exporters.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.cluster.baselines import saga, vllm
+from repro.cluster.faults import chaos_plan
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import swebench_workload
+from repro.obs.export import (chrome_trace, latency_summary, percentile,
+                              report)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import ROOT, Tracer, as_tracer
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+# --- tracer unit behaviour --------------------------------------------------
+def test_tracer_nesting_and_double_end():
+    tr = Tracer()
+    ses = tr.begin("session/a", "session", 0.0)
+    step = tr.begin("session/a", "step", 0.0, parent=ses, step=0)
+    tr.instant("run", "fault", 0.5, kind="fail")
+    tr.end(step, 1.0)
+    tr.end(ses, 2.0, status="ok")
+    with pytest.raises(ValueError):
+        tr.end(ses, 3.0)                      # double end
+    tr.check_closed()                         # everything closed
+    kids = tr.children()
+    assert [s.name for s in kids[ROOT]] == ["session", "fault"]
+    assert [s.name for s in kids[ses]] == ["step"]
+    assert tr.get(step).dur == 1.0
+    assert tr.counts() == {"fault": 1, "session": 1, "step": 1}
+
+
+def test_tracer_check_closed_reports_leaks():
+    tr = Tracer()
+    tr.begin("session/a", "step", 0.0)
+    with pytest.raises(RuntimeError, match="never closed"):
+        tr.check_closed()
+
+
+def test_tracer_end_clamps_negative_duration():
+    """A cancellation can land before a future-dated phase would have
+    started (serial prefill pipeline): duration clamps to zero."""
+    tr = Tracer()
+    s = tr.begin("session/a", "decode", 5.0)
+    sp = tr.end(s, 3.0, status="cancelled")
+    assert sp.t1 == 5.0 and sp.dur == 0.0
+
+
+def test_as_tracer_normalization():
+    tr = Tracer()
+    assert as_tracer(tr) is tr
+    assert isinstance(as_tracer(True), Tracer)
+    assert as_tracer(False) is None and as_tracer(None) is None
+
+
+def test_metrics_registry_exports():
+    m = MetricsRegistry()
+    m.counter("steps", worker=1).inc()
+    m.counter("steps", worker=0).inc(2)
+    m.gauge("depth", worker=0).set(0.1, 3)
+    h = m.histogram("lat_s", edges=(0.1, 1.0), window_s=1.0)
+    for t, v in ((0.0, 0.05), (0.5, 0.5), (1.5, 2.0)):
+        h.observe(t, v)
+    assert h.count == 3 and h.counts == [1, 1, 1]
+    assert h.quantile(0.5) == 1.0
+    assert h.windows == {0: [2, 0.55], 1: [1, 2.0]}
+    prom = m.to_prometheus()
+    assert '# TYPE steps counter' in prom
+    assert 'steps{worker="0"} 2' in prom
+    assert 'lat_s_bucket{le="+Inf"} 3' in prom
+    # kind mismatch on a registered name is an error
+    with pytest.raises(ValueError):
+        m.gauge("steps")
+    # export order is label-sorted, independent of creation order
+    js = m.to_json()
+    assert list(js["steps"]["series"]) == ['{worker="0"}',
+                                           '{worker="1"}']
+
+
+def test_percentile_matches_summarize_convention():
+    xs = list(range(10))
+    assert percentile(xs, 0.99) == 9.0        # min(n-1, int(p*n))
+    assert percentile(xs, 0.5) == 5.0
+    assert percentile([], 0.5) == 0.0
+    assert latency_summary([])["n"] == 0
+
+
+# --- substrate conservation (simulator) -------------------------------------
+def _sim(policy, trace, fault_plan=None, n_tasks=40):
+    sim = ClusterSim(
+        swebench_workload(n_tasks=n_tasks, rate_per_min=8.0, seed=0),
+        policy, n_workers=8, seed=0, trace=trace, fault_plan=fault_plan)
+    sim.run(horizon_s=864000)
+    sim.check_conservation()
+    return sim
+
+
+def test_sim_traced_summary_identical_and_spans_closed():
+    base = _sim(saga(), trace=False)
+    traced = _sim(saga(), trace=True)
+    assert repr(summarize(base)) == repr(summarize(traced))
+    traced.tracer.check_closed()
+    counts = traced.tracer.counts()
+    # one session span per task, and the tree reconciles with the
+    # executed workflow structure: every step got exactly one step span
+    assert counts["session"] == len(traced.tasks)
+    n_steps = sum(t.n_steps for t in traced.tasks.values())
+    assert counts["step"] == n_steps
+    assert counts["prefill"] + counts.get("resume", 0) == n_steps
+    assert counts["decode"] == n_steps
+    # non-terminal steps wait on a tool
+    assert counts["tool_gap"] == n_steps - len(traced.tasks)
+
+
+def test_sim_span_tree_properly_nested():
+    traced = _sim(saga(), trace=True, n_tasks=20)
+    tr = traced.tracer
+    for sp in tr.spans:
+        if sp.parent_id == ROOT:
+            continue
+        par = tr.get(sp.parent_id)
+        assert par.track == sp.track
+        assert par.t0 <= sp.t0 + 1e-9
+        if sp.kind == "span":
+            assert sp.t1 <= par.t1 + 1e-9, (sp.name, par.name)
+
+
+def test_sim_chaos_cancelled_spans_not_leaked():
+    plan = chaos_plan(n_workers=8, horizon_s=400.0, seed=1)
+    base = _sim(vllm(), trace=False, fault_plan=plan)
+    traced = _sim(vllm(), trace=True, fault_plan=plan)
+    assert repr(summarize(base)) == repr(summarize(traced))
+    traced.tracer.check_closed()                # cancelled, not open
+    cancels = traced.tracer.counts().get("cancel", 0)
+    assert cancels > 0, "chaos plan injected no cancellations"
+    # every cancel instant pairs with a cancelled prefill AND decode
+    by = traced.tracer.counts_by_status
+    assert by("prefill")["cancelled"] + \
+        by("resume").get("cancelled", 0) == cancels
+    assert by("decode")["cancelled"] == cancels
+    # fault instants reconcile with the plan events that fired
+    faults = [sp for sp in traced.tracer.spans if sp.name == "fault"]
+    fired = [e for e in plan if e[0] <= traced.now]
+    assert len(faults) == len(fired)
+    assert [sp.meta["kind"] for sp in faults] == [k for _, k, _ in fired]
+
+
+def test_sim_trace_bytes_stable_in_process():
+    a = _sim(saga(), trace=True, n_tasks=20)
+    b = _sim(saga(), trace=True, n_tasks=20)
+    assert a.tracer.canonical_bytes() == b.tracer.canonical_bytes()
+    assert a.obs_metrics.canonical_bytes() == \
+        b.obs_metrics.canonical_bytes()
+    assert a.obs_metrics.to_prometheus() == b.obs_metrics.to_prometheus()
+
+
+# --- substrate conservation (serving runtime) -------------------------------
+@pytest.fixture(scope="module")
+def rt_model():
+    import jax
+    from repro.configs import get_config, load_all
+    from repro.models import lm
+    load_all()
+    cfg = get_config("micro")
+    return cfg, lm.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _runtime(rt_model, trace, fault_plan=None):
+    from repro.cluster.workload import runtime_requests
+    from repro.serving.runtime import ServingRuntime
+    cfg, params = rt_model
+    rt = ServingRuntime(cfg, params, n_workers=2, n_slots=2, max_len=256,
+                        pool_blocks=96, seed=0, trace=trace,
+                        fault_plan=fault_plan)
+    for r in runtime_requests(n_sessions=5, vocab=cfg.vocab, seed=4,
+                              n_steps=2, max_ctx=200):
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    return rt
+
+
+def test_runtime_traced_summary_identical_and_spans_closed(rt_model):
+    base = _runtime(rt_model, trace=False)
+    traced = _runtime(rt_model, trace=True)
+    assert repr(base.summarize()) == repr(traced.summarize())
+    traced.tracer.check_closed()
+    counts = traced.tracer.counts()
+    assert counts["session"] == len(traced.sessions)
+    n_steps = sum(s.step_idx + 1 for s in traced.sessions.values())
+    assert counts["step"] == n_steps
+    assert counts["decode"] >= n_steps          # preempt resumes add more
+    assert counts["round"] == traced.summarize()["decode_rounds"]
+    rep = report(traced.tracer)
+    assert rep["n_sessions"] == len(traced.sessions)
+    assert rep["round_latency"]["n"] == counts["round"]
+
+
+def test_runtime_chaos_traced_summary_identical(rt_model):
+    plan = chaos_plan(n_workers=2, horizon_s=3.0, seed=1)
+    base = _runtime(rt_model, trace=False, fault_plan=plan)
+    traced = _runtime(rt_model, trace=True, fault_plan=plan)
+    assert repr(base.summarize()) == repr(traced.summarize())
+    traced.tracer.check_closed()
+    cancelled = traced.summarize()["cancelled_attempts"]
+    by_cancel = sum(v.get("cancelled", 0)
+                    for v in (traced.tracer.counts_by_status("prefill"),
+                              traced.tracer.counts_by_status("resume"),
+                              traced.tracer.counts_by_status("decode")))
+    assert by_cancel == cancelled
+    assert traced.tracer.counts().get("cancel", 0) == cancelled
+
+
+def test_runtime_trace_env_gate(rt_model, monkeypatch):
+    from repro.serving.runtime import ServingRuntime
+    cfg, params = rt_model
+    monkeypatch.delenv("SAGA_TRACE", raising=False)
+    assert ServingRuntime(cfg, params, n_workers=1).tracer is None
+    monkeypatch.setenv("SAGA_TRACE", "1")
+    assert ServingRuntime(cfg, params, n_workers=1).tracer is not None
+    monkeypatch.setenv("SAGA_TRACE", "0")
+    assert ServingRuntime(cfg, params, n_workers=1).tracer is None
+
+
+# --- exporters ---------------------------------------------------------------
+def test_chrome_trace_export_shape():
+    traced = _sim(saga(), trace=True, n_tasks=10)
+    doc = chrome_trace(traced.tracer, traced.obs_metrics)
+    evs = doc["traceEvents"]
+    names = {e["ph"] for e in evs}
+    assert {"M", "X", "C"} <= names
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 for e in xs)
+    # every span event carries its id and the track got a thread name
+    tids = {e["tid"] for e in evs if e["ph"] == "M"}
+    assert all(e["tid"] in tids for e in xs)
+
+
+def test_report_phase_decomposition_sums_to_tct():
+    traced = _sim(saga(), trace=True, n_tasks=20)
+    rep = report(traced.tracer)
+    tct_total = rep["tct"]["mean"] * rep["tct"]["n"]
+    attributed = sum(rep["phase_totals_s"].values())
+    # phases + residual account for every TCT second exactly
+    assert attributed == pytest.approx(tct_total, rel=1e-9)
+    assert all(v >= 0 for v in rep["phase_totals_s"].values())
+
+
+def test_export_cli_demo(tmp_path):
+    out = tmp_path / "trace.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.obs.export", str(out)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    assert out.exists()
+    assert "phase" not in r.stderr
+    assert "wrote" in r.stdout
+
+
+# --- cross-process / cross-PYTHONHASHSEED byte identity ---------------------
+_TRACE_SNIPPET = """
+import hashlib
+from repro.cluster.baselines import saga
+from repro.cluster.faults import chaos_plan
+from repro.cluster.simulator import ClusterSim, summarize
+from repro.cluster.workload import swebench_workload
+plan = chaos_plan(n_workers=8, horizon_s=400.0, seed=1)
+sim = ClusterSim(swebench_workload(n_tasks=40, rate_per_min=8.0, seed=0),
+                 saga(), n_workers=8, seed=0, trace=True, fault_plan=plan)
+sim.run(horizon_s=864000)
+sim.check_conservation()
+sim.tracer.check_closed()
+print(repr(summarize(sim)))
+print(hashlib.sha256(sim.tracer.canonical_bytes()).hexdigest())
+print(hashlib.sha256(sim.obs_metrics.canonical_bytes()).hexdigest())
+"""
+
+
+def test_trace_bytes_identical_across_hashseeds():
+    """The trace and metric exports extend the summarize() determinism
+    contract: byte-identical across processes whose PYTHONHASHSEED
+    disagree, even under a chaos plan."""
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run([sys.executable, "-c", _TRACE_SNIPPET],
+                           env=env, capture_output=True, text=True,
+                           timeout=300)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]

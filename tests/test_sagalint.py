@@ -210,6 +210,58 @@ def test_life_leak_pool_scoped_alloc(tmp_path):
         "        return out\n"), "ok.py")
 
 
+def test_life_span_leak(tmp_path):
+    """Receiver-scoped span family: a ``tracer.begin`` whose early exit
+    neither ends the span nor hands it off reports under the dedicated
+    ``life-span`` rule id."""
+    fs = _lint(tmp_path, (
+        "class D:\n"
+        "    def step(self, sid):\n"
+        "        span = self.tracer.begin('s', 'step', self.now)\n"
+        "        if not self.healthy(sid):\n"
+        "            return\n"                  # span leaks here
+        "        self.tracer.end(span, self.now)\n"))
+    assert _rules(fs) == ["life-span"]
+    assert "span" in fs[0].message
+    # suppressible like any rule
+    assert not _lint(tmp_path, (
+        "class D:\n"
+        "    def step(self, sid):\n"
+        "        span = self.tracer.begin('s', 'step', self.now)"
+        "  # sagalint: ok(life-span) caller closes via _tr_open\n"
+        "        if not self.healthy(sid):\n"
+        "            return\n"
+        "        self.tracer.end(span, self.now)\n"), "sup.py")
+
+
+def test_life_span_negative_paths(tmp_path):
+    """No finding when every path ends the span, when the early exit
+    hands off to a scheduled continuation, when a purely-acquiring
+    helper defers the end to its caller (the ``_tr_begin`` wrapper
+    shape), or when bare ``begin``/``end`` lack a tracer receiver."""
+    assert not _lint(tmp_path, (
+        "class D:\n"
+        "    def ok_all_paths(self, sid):\n"
+        "        span = self.tracer.begin('s', 'step', self.now)\n"
+        "        if not self.healthy(sid):\n"
+        "            self.tracer.end(span, self.now, status='dropped')\n"
+        "            return\n"
+        "        self.tracer.end(span, self.now)\n"
+        "    def ok_handoff(self, sid):\n"
+        "        self.tracer.begin('s', 'step', self.now)\n"
+        "        if not self.healthy(sid):\n"
+        "            self.ev.schedule(0.0, 'retry', (sid,))\n"
+        "            return\n"
+        "        self.tracer.end(0, self.now)\n"
+        "    def ok_pure_helper(self, sid):\n"
+        "        self._open[sid] = self.tracer.begin('s', 'x', self.now)\n"
+        "    def ok_bare_names(self, tx):\n"
+        "        h = tx.begin()\n"
+        "        if h is None:\n"
+        "            return\n"
+        "        tx.end()\n"))
+
+
 GUARD_SRC = """\
 class D:
     def _on_step_done(self, sid, attempt=-1):

@@ -118,3 +118,25 @@ def test_server_saga_reduces_regeneration():
     # identical decode work either way (policies change prefill only)
     assert results["saga"]["decode_steps"] == \
         results["reqlevel"]["decode_steps"]
+
+
+def test_server_stats_surface_lifecycle_counters():
+    """``MultiWorkerServer.stats()`` must expose the runtime's full
+    counter set: the copy-byte counters (park/resume/migration) and the
+    fault/preemption lifecycle counters, matching the runtime's own
+    values — the server is a thin wrapper, not a filter."""
+    srv = MultiWorkerServer(CFG, PARAMS, n_workers=2, n_slots=2,
+                            max_len=256, pool_blocks=64)
+    for i in range(2):
+        srv.run_task(_mk_req(i, CFG.vocab))
+    st = srv.stats()
+    for key in ("park_copy_bytes", "resume_copy_bytes",
+                "migration_copy_bytes", "steals", "migrations",
+                "prefetch_copies", "faults_injected",
+                "cancelled_attempts", "preemptions", "afs_dev_max"):
+        assert key in st, f"server stats missing {key}"
+        assert st[key] == srv.runtime.stats()[key]
+    # a clean serial run injects no faults and preempts nothing
+    assert st["faults_injected"] == 0
+    assert st["cancelled_attempts"] == 0
+    assert st["preemptions"] == 0
