@@ -39,7 +39,14 @@ The smoke gate additionally asserts:
     identical-seed runs in-process AND across processes with different
     PYTHONHASHSEED (the runtime's determinism contract), with the
     fingerprint written to ``benchmarks/results/`` for CI to diff
-    against the committed ``benchmarks/expected/`` twin.
+    against the committed ``benchmarks/expected/`` twin;
+  * **disaggregation A/B** — the same BurstGPT-style burst mix over 8
+    engines, unified vs prefill/decode-disaggregated pools (both arms
+    under chunked-prefill interference): disagg must improve
+    TTFT-on-resume p99 (speculative prefill + handoff overlap the tool
+    gap) without degrading p99 decode-round latency, conserve, and its
+    own fingerprint (clean + prefill-engine-death chaos) is diffed
+    against ``benchmarks/expected/serve_bench_disagg_fingerprint.txt``.
 
 CSV rows follow the house format: ``name,us_per_call,derived``.
 """
@@ -63,6 +70,7 @@ from repro.cluster.workload import runtime_requests
 from repro.configs import get_config, load_all
 from repro.core.coordinator import SAGAConfig
 from repro.models import lm
+from repro.serving.disagg import ROLE_DECODE, ROLE_PREFILL
 from repro.serving.runtime import (AgentRequest, RuntimePerf,
                                    ServingRuntime)
 
@@ -76,6 +84,7 @@ N_SLOTS = 6
 MAX_LEN = 256
 POOL_BLOCKS = 144
 SEED = 0
+DISAGG_WORKERS = 8
 # runtime_requests scales token counts down 64x to fit the micro model;
 # the virtual prefill rate scales with them (8000 tok/s at 70B / 64) so
 # regeneration costs the same *fraction* of virtual time as at scale.
@@ -298,6 +307,92 @@ def run_paged_gather_ab(cfg, params) -> dict:
     return out
 
 
+def _disagg_arm(cfg, params, reqs, disagg: bool):
+    """One traced arm of the disaggregation A/B.  Both arms run the
+    same BurstGPT-style burst mix over the same engine count with the
+    same chunked-prefill interference coefficients (both directions:
+    prefills stretch co-resident decode rounds AND are themselves
+    chunked into the round schedule) — the only difference is whether
+    prefill work shares decode engines (unified) or lives in its own
+    pool with block-granular handoff (disagg).  The mix is
+    prefill-heavy (long agent contexts, short tool-step decodes), so
+    the pool is provisioned to the prefill share of compute: 5 prefill
+    / 3 decode engines — role sizing is a deployment choice, and an
+    underprovisioned pool simply queues (``prefill_deferred``)."""
+    perf = RuntimePerf(prefill_tokens_per_s=8000.0 / 64.0,
+                       prefill_round_interference=0.35,
+                       prefill_decode_interference=0.35)
+    roles = [ROLE_PREFILL] * 5 + [ROLE_DECODE] * 3 if disagg else None
+    rt = ServingRuntime(cfg, params, n_workers=DISAGG_WORKERS,
+                        saga=SAGAConfig(disaggregate=disagg),
+                        n_slots=6, max_len=MAX_LEN,
+                        pool_blocks=POOL_BLOCKS, seed=SEED, perf=perf,
+                        roles=roles, trace=True)
+    for r in reqs:
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    rt.verify_pool_mirrors()
+    rt.tracer.check_closed()
+    return rt, report(rt.tracer)
+
+
+def _disagg_reqs(cfg):
+    return runtime_requests(n_sessions=16, vocab=cfg.vocab, seed=SEED,
+                            mix=("burstgpt",), n_steps=3,
+                            max_ctx=MAX_LEN - 32)
+
+
+def run_disagg_ab(cfg, params) -> dict:
+    """Disaggregation gate: under a bursty mix where chunked prefill
+    interferes with co-resident decode rounds
+    (``prefill_round_interference`` > 0 in BOTH arms), splitting the
+    engines into prefill/decode pools must improve TTFT-on-resume p99
+    — resumes whose speculative prefill and handoff overlapped the tool
+    gap join a decode slot with zero prefill on the critical path — and
+    must not degrade p99 decode-round latency (prefill leaves the
+    decode engines)."""
+    uni_rt, uni = _disagg_arm(cfg, params, _disagg_reqs(cfg), False)
+    dis_rt, dis = _disagg_arm(cfg, params, _disagg_reqs(cfg), True)
+    ds = dis_rt.summarize()
+    if ds["handoffs"] < 1 or ds["speculative_prefills"] < 1:
+        raise AssertionError(
+            f"disagg arm never exercised the handoff path: {ds}")
+    uni_ttft = uni["ttft_on_resume"]["p99"]
+    dis_ttft = dis["ttft_on_resume"]["p99"]
+    if not dis_ttft < uni_ttft:
+        raise AssertionError(
+            f"disaggregation did not improve TTFT-on-resume p99: "
+            f"{dis_ttft:.4f}s vs unified {uni_ttft:.4f}s")
+    uni_round = uni["round_latency"]["p99"]
+    dis_round = dis["round_latency"]["p99"]
+    if not dis_round <= uni_round:
+        raise AssertionError(
+            f"disaggregation degraded p99 round latency: "
+            f"{dis_round:.4f}s vs unified {uni_round:.4f}s")
+    out = {
+        "n_engines": DISAGG_WORKERS,
+        "roles": list(dis_rt.roles),
+        "unified_ttft_resume_p99": uni_ttft,
+        "disagg_ttft_resume_p99": dis_ttft,
+        "ttft_improvement_x": uni_ttft / max(dis_ttft, 1e-9),
+        "unified_round_p99": uni_round,
+        "disagg_round_p99": dis_round,
+        "handoffs": ds["handoffs"],
+        "handoff_bytes": ds["handoff_bytes"],
+        "speculative_prefills": ds["speculative_prefills"],
+        "prefill_deferred": ds["prefill_deferred"],
+        "unified_summary": uni_rt.summarize(),
+        "disagg_summary": ds,
+    }
+    emit("serve_disagg_ab", dis_ttft,
+         f"ttft_resume_p99={dis_ttft:.4f}s vs {uni_ttft:.4f}s "
+         f"({out['ttft_improvement_x']:.2f}x) round_p99="
+         f"{dis_round:.4f}s vs {uni_round:.4f}s "
+         f"handoffs={ds['handoffs']}")
+    return out
+
+
 def run_traced(cfg, params, expect_summary) -> dict:
     """Observability leg: the clean SAGA pass re-run with the span
     tracer on.  Tracing is read-only by contract, so the traced
@@ -362,6 +457,34 @@ def _fingerprint() -> str:
     return "\n".join(lines)
 
 
+def _disagg_fingerprint() -> str:
+    """Disaggregated-mode determinism contract: a clean disagg run and
+    a disagg run with the prefill engine dying mid-stream, both
+    summarized — handoff placement, transfer windows and fault
+    cancellation are RNG- and hash-order-free, so these lines are
+    byte-identical across processes and ``PYTHONHASHSEED``."""
+    load_all()
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    def _one(fault_plan=None):
+        rt = ServingRuntime(cfg, params, n_workers=4,
+                            saga=SAGAConfig(disaggregate=True),
+                            n_slots=N_SLOTS, max_len=MAX_LEN,
+                            pool_blocks=POOL_BLOCKS, seed=SEED,
+                            perf=PERF, fault_plan=fault_plan)
+        for r in runtime_requests(n_sessions=8, vocab=cfg.vocab,
+                                  seed=SEED, mix=("burstgpt",),
+                                  n_steps=2, max_ctx=MAX_LEN - 32):
+            rt.submit(r)
+        rt.run()
+        rt.check_conservation()
+        return repr(rt.summarize())
+
+    return "disagg " + _one() + "\ndisagg-chaos " \
+        + _one(fault_plan=[(0.5, "fail", 0), (2.0, "recover", 0)])
+
+
 def smoke() -> None:
     """CI gate: 16 concurrent sessions over 2 engines on real forward
     passes — SAGA strictly below request-level regeneration; chaos-mode
@@ -377,14 +500,19 @@ def smoke() -> None:
     chaos = run_chaos(cfg, params)
     pre = run_preemption_ab(cfg, params)
     pg = run_paged_gather_ab(cfg, params)
+    dz = run_disagg_ab(cfg, params)
     rep = run_traced(cfg, params, out["saga"])
     out["chaos"] = chaos
     out["preemption"] = pre
     out["paged_vs_gather"] = pg
+    out["disagg_ab"] = dz
     out["trace_report"] = rep
     save_json("serve_bench_smoke", out)
     a = _fingerprint()
     assert a == _fingerprint(), "same-process summaries diverged"
+    d = _disagg_fingerprint()
+    assert d == _disagg_fingerprint(), \
+        "same-process disagg summaries diverged"
     outs = []
     for hashseed in ("0", "424242"):
         env = dict(os.environ)
@@ -395,8 +523,10 @@ def smoke() -> None:
         assert r.returncode == 0, r.stderr
         outs.append(r.stdout)
     assert outs[0] == outs[1], "cross-process summaries diverged"
-    assert a + "\n" == outs[0], "parent/child summaries diverged"
+    assert a + "\n" + d + "\n" == outs[0], \
+        "parent/child summaries diverged"
     save_fingerprint("serve_bench", a)
+    save_fingerprint("serve_bench_disagg", d)
     print(f"smoke ok: {out['n_sessions']} sessions / {out['n_engines']} "
           f"engines, regen {out['saga']['regen_tokens']} vs "
           f"{out['reqlevel']['regen_tokens']} "
@@ -410,6 +540,9 @@ def smoke() -> None:
           f"{pg['gather_park_copy_bytes']}/"
           f"{pg['gather_resume_copy_bytes']} bytes "
           f"(round delta {pg['round_latency_delta_us']:+.0f}us); "
+          f"disagg ttft-on-resume p99 {dz['disagg_ttft_resume_p99']:.4f}s "
+          f"vs unified {dz['unified_ttft_resume_p99']:.4f}s "
+          f"({dz['ttft_improvement_x']:.2f}x, {dz['handoffs']} handoffs); "
           f"traced run byte-identical ({rep['span_counts']['session']} "
           f"session span trees closed); determinism green")
 
@@ -423,6 +556,7 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke_emit:
         print(_fingerprint())
+        print(_disagg_fingerprint())
         return
     if args.smoke:
         smoke()

@@ -12,7 +12,9 @@ catches at end-of-run:
                                                 ``park_session`` /
                                                 ``fail``
   blocks            ``park`` / ``import_kv`` /  ``free_session`` /
-                    ``*pool*.alloc`` /          ``evict_session``
+                    ``import_handoff`` /        ``evict_session`` /
+                    ``stage_prefill`` /         ``_handoff_abort``
+                    ``*pool*.alloc`` /
                     ``*pool*.extend`` /
                     ``*pool*.ensure_tail_room``
   afs-work          ``note_progress``           ``refund_work``
@@ -68,8 +70,13 @@ FAMILIES: Dict[str, Dict[str, Set[str]]] = {
         "release": {"release_session", "park_session", "fail"},
     },
     "blocks": {
-        "acquire": {"park", "import_kv"},
-        "release": {"free_session", "evict_session"},
+        "acquire": {"park", "import_kv", "import_handoff",
+                    "stage_prefill"},
+        # _handoff_abort unwinds a disaggregated handoff attempt: it
+        # evicts the staged prefill-side copy and returns the staging
+        # reservation, so it is a blocks release in the runtime's
+        # vocabulary
+        "release": {"free_session", "evict_session", "_handoff_abort"},
     },
     "afs-work": {
         "acquire": {"note_progress"},
@@ -105,7 +112,8 @@ _JOIN_ATTRS = {"_active"}
 # allocate-at-admit block acquires (paged serving): bare names are too
 # generic (`list.extend`, arena `alloc` helpers), so they only classify
 # when the call's receiver chain passes a KV pool
-_POOL_SCOPED_ACQUIRES = {"alloc", "extend", "ensure_tail_room"}
+_POOL_SCOPED_ACQUIRES = {"alloc", "extend", "extend_parked",
+                         "ensure_tail_room"}
 _POOL_RECEIVERS = {"pool"}
 
 STAMP_PARAMS = ("attempt", "gen", "generation")

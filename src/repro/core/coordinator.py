@@ -78,6 +78,13 @@ class SAGAConfig:
     enable_ttl: bool = True
     enable_prefetch: bool = True
     enable_afs: bool = True
+    # disaggregated prefill/decode engine pools (serving runtime §5 /
+    # ROADMAP item 2).  Off by default: the unified pool is the
+    # behaviour every committed fingerprint was captured under.  When
+    # on, the runtime splits engines into prefill / decode roles, a
+    # PrefillScheduler owns prefill placement, and Eq. 7 affinity
+    # routing decides decode placement only (see serving/disagg.py).
+    disaggregate: bool = False
     seed: int = 0
 
 
@@ -128,10 +135,24 @@ class GlobalCoordinator:
         # O(n_workers)
         self.pools_used = 0.0
         self._sites: Dict[str, Set[int]] = {}
+        # disaggregated pools (cfg.disaggregate): workers the serving
+        # runtime declared as prefill-role.  Routing masks them to INF
+        # (Eq. 7 decides decode placement only) and they never enter the
+        # work stealer's idle set.
+        self.prefill_workers: Set[int] = set()
         # instrumentation
         self.cache_hits = 0
         self.cache_misses = 0
         self.regen_tokens = 0.0
+
+    def set_worker_role(self, worker: int, role: str) -> None:
+        """Declare a worker's engine role (``prefill`` / ``decode`` /
+        ``unified``).  Only ``prefill`` changes behaviour: the worker is
+        excluded from Eq. 7 routing and from the steal idle set."""
+        if role == "prefill":
+            self.prefill_workers.add(worker)
+        else:
+            self.prefill_workers.discard(worker)
 
     def cached_sites(self, session_id: str) -> Tuple[int, ...]:
         """Workers whose pool currently holds an entry for the session
@@ -232,10 +253,16 @@ class GlobalCoordinator:
             # dead-worker masking and argmin run in C
             if self._n_dead:
                 loads = np.where(self._alive_np[:len(loads)], loads, INF)
+            if self.prefill_workers:
+                # disaggregated pools: Eq. 7 decides DECODE placement
+                # only — prefill-role workers are never a routing target
+                loads = loads.astype(float, copy=True)
+                loads[sorted(self.prefill_workers)] = INF
             if not self.cfg.enable_affinity:
                 return int(loads.argmin())
         else:
-            loads = [l if self.alive[i] else INF
+            loads = [INF if (not self.alive[i]
+                             or i in self.prefill_workers) else l
                      for i, l in enumerate(loads)]
             if not self.cfg.enable_affinity:
                 return min(range(len(loads)), key=lambda i: loads[i])
@@ -449,6 +476,27 @@ class GlobalCoordinator:
             info.cur_tool if info is not None else "unknown", now,
             info.node_id if info else 0)
 
+    def handoff_land(self, session_id: str, worker: int,
+                     ctx_tokens: float, entry_bytes: float,
+                     now: float) -> Tuple[bool, List[CacheEntry]]:
+        """A prefill→decode KV handoff landed on ``worker`` (disagg
+        mode): the staged blocks are now a parked prefix there, so WA-LRU
+        must see them.  Inserts a pinned TTL entry — pinned because the
+        session is about to resume on this prefix, exactly like a hit's
+        ``on_step_start`` pin; ``on_step_end`` unpins as usual.  No
+        hit/miss accounting: the step's verdict was counted when the
+        prefill job was admitted.  Returns (inserted, evicted) so the
+        caller mirrors the real blocks."""
+        info = self.sessions.get(session_id)
+        evicted = self._insert_ttl_entry(
+            session_id, worker, ctx_tokens, entry_bytes,
+            info.cur_tool if info is not None else "unknown", now,
+            info.node_id if info else 0)
+        e = self.pools[worker].entries.get(session_id)
+        if e is not None:
+            e.pinned = True
+        return self.pools[worker].contains(session_id), evicted
+
     def on_tool_done(self, session_id: str, tool: str, latency_s: float,
                      obs_tokens: float, now: float) -> None:
         self.stats.observe(tool, obs_tokens, latency_s)
@@ -458,7 +506,13 @@ class GlobalCoordinator:
     def on_worker_idle(self, worker: int, now: float) -> None:
         """A worker's pending queue just went empty — enter the indexed
         idle set with the *exact* transition time (the legacy per-epoch
-        scan quantized idle starts to epoch boundaries)."""
+        scan quantized idle starts to epoch boundaries).  Prefill-role
+        workers never enter the idle set: decode stealers must not raid
+        the prefill pool (and a prefill engine has no decode queue to
+        accrue steal credit from) — this guard also covers the
+        recover/scale-up paths, which re-announce idleness here."""
+        if worker in self.prefill_workers:
+            return
         if self.cfg.enable_stealing and self.alive[worker]:
             self.stealer.note_queue_state(worker, True, now)
 

@@ -29,9 +29,12 @@ from repro.obs.tracer import ROOT, Span, Tracer
 # phases that decompose a session's TCT (disjoint by construction:
 # queue_wait ends at admit, prefill/resume ends at the decode join,
 # decode ends at the round that finishes the step, tool_gap spans the
-# virtual tool latency, migration covers the steal transfer window)
+# virtual tool latency, migration covers the steal transfer window).
+# ``handoff`` (disaggregated prefill->decode transfer) is session-level
+# and OVERLAPS the tool gap, so it is reported but never subtracted
+# from the unattributed remainder.
 PHASES = ("queue_wait", "prefill", "resume", "decode", "tool_gap",
-          "migration")
+          "migration", "handoff")
 
 
 def percentile(xs: Sequence[float], p: float) -> float:
@@ -130,6 +133,13 @@ def report(tracer: Tracer) -> dict:
         tcts.append(ses.dur)
         attributed = 0.0
         for step in kids.get(ses.span_id, ()):
+            if step.name == "handoff":
+                # disagg transfer window: runs concurrently with the
+                # tool gap (off the critical path), so it contributes
+                # to its own phase bucket without reducing ``other``
+                if step.kind == "span":
+                    phase_tot["handoff"] += step.dur
+                continue
             phases = kids.get(step.span_id, ())
             for ph in phases:
                 if ph.name in phase_tot and ph.kind == "span":

@@ -44,6 +44,16 @@ Architecture map (module -> paper section):
     from the real decoded tokens at park/resume boundaries).
     ``submit`` returns a ``WorkflowHandle`` (``result()`` /
     ``step_outputs`` / ``status`` / taken ``path``).
+  * ``disagg`` — disaggregated prefill/decode pools (opt-in via
+    ``SAGAConfig.disaggregate``; ``docs/DISAGG.md``): engines declare
+    roles, a deterministic ``PrefillScheduler`` owns the prefill pool
+    (new-session and tool-resume prefills, speculative prefill
+    overlapping tool gaps), and finished KV hands off to the decode
+    pool block-granularly (``stage_prefill`` → ``export_kv`` →
+    ``import_handoff``) over a deterministic transfer window; Eq. 7
+    affinity then routes *decode* placement only.  Every handoff job
+    is attempt-stamped so an engine dying mid-handoff cancels cleanly
+    and re-prefills token-identically.
   * ``server.MultiWorkerServer`` — legacy blocking facade: a thin
     serial wrapper over the runtime.
   * ``sanitizer.RuntimeSanitizer`` — read-only per-event conservation

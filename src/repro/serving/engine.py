@@ -142,6 +142,9 @@ class Engine:
         self.park_copy_bytes = 0
         self.resume_copy_bytes = 0
         self.migration_copy_bytes = 0
+        # prefill->decode handoff transport (disaggregated pools):
+        # counted separately from migration so the A/B stays legible
+        self.handoff_copy_bytes = 0
 
         (self._jit_decode, self._jit_prefill,
          self._jit_paged_decode) = _jitted_fns(self.cfg, self.env)
@@ -368,6 +371,42 @@ class Engine:
         ok = self.pool.park(sid, k, v, n_tokens)
         if ok:
             self.migration_copy_bytes += self.pool.session_bytes(sid)
+        return ok
+
+    # -- disaggregated prefill/decode handoff (serving/disagg.py) -----------
+    def stage_prefill(self, sid: str, tokens: np.ndarray,
+                      start: int) -> bool:
+        """Prefill-role engines: compute KV for ``tokens[start:]``
+        standalone (the causal mask makes a delta prefill independent of
+        where the parked prefix lives — same jitted fn, same inputs,
+        bit-identical KV) and stage it in this pool as a PARKED session
+        awaiting handoff.  ``start == 0`` is a miss: the full context is
+        regenerated here.  Returns False when the staging pool cannot
+        fit — the PrefillScheduler gates admission on ``can_fit`` so
+        this only trips under races it then defers."""
+        delta = np.asarray(tokens[start:], np.int32)
+        dk, dv = self._prefill_kv(delta)
+        if not self.pool.park(sid, dk, dv, len(delta)):
+            return False
+        self.prefill_tokens += len(delta)
+        if start == 0:
+            self.regen_tokens += len(delta)
+        return True
+
+    def import_handoff(self, sid: str, k: jnp.ndarray, v: jnp.ndarray,
+                       n_tokens: int, *, append: bool) -> bool:
+        """Decode-role engines: land handed-off prefill KV.  ``append``
+        (cache hit) extends the parked prefix in place; otherwise (miss)
+        the full context parks fresh.  Returns False when the parked
+        population would overflow nominal capacity — the runtime evicts
+        and retries, or cancels the handoff."""
+        if append:
+            ok = self.pool.extend_parked(sid, k, v, n_tokens)
+        else:
+            ok = self.pool.park(sid, k, v, n_tokens)
+        if ok:
+            self.handoff_copy_bytes += int(n_tokens) * \
+                (self.pool.bytes_per_block // self.pool.block)
         return ok
 
     def evict_session(self, sid: str) -> None:

@@ -13,7 +13,11 @@ Two pieces live here:
   * ``EventLoop`` — a (time, seq, kind, args) min-heap.  ``seq`` is a
     global monotone counter, so same-timestamp events fire in schedule
     order: determinism never rests on float tie-breaking or object
-    identity.
+    identity.  Handlers resolve by name (``_on_<kind>`` on the
+    runtime); the vocabulary includes the disaggregated prefill-pool
+    lifecycle (``pf_done`` — staging prefill finished, ``handoff_done``
+    — cross-pool KV transfer landed), both attempt-stamped so faults
+    make in-flight events stale rather than racy.
   * ``SessionQueue`` — a per-engine pending-session priority queue
     (AFS-ordered admission, §6), the serving twin of the simulator's
     ``StepQueue``: a lazy-deletion heap with tombstoned removal so the

@@ -187,6 +187,26 @@ class PagedKVPool:
         self.v_pool = self.v_pool.at[:, bids, offs].set(vd)
         self.lens[sid] = end
 
+    def extend_parked(self, sid: str, k: jnp.ndarray, v: jnp.ndarray,
+                      n_new: Optional[int] = None) -> bool:
+        """Append contiguous delta KV behind a PARKED session's prefix —
+        the landing half of a prefill→decode handoff on a cache hit: the
+        parked prefix blocks stay put and the handed-off delta appends
+        behind them (mid-block starts supported, same scatter as
+        :meth:`extend`).  Unlike ``extend``, the new blocks join the
+        parked population, so the draw is checked against the NOMINAL
+        capacity; returns False (caller evicts or cancels the handoff)
+        when the delta would not fit."""
+        assert sid in self.tables and sid not in self.resident, \
+            f"extend_parked of non-parked session {sid!r}"
+        n_new = int(k.shape[1]) if n_new is None else int(n_new)
+        need = self._blocks_for(self.lens[sid] + n_new) \
+            - len(self.tables[sid])
+        if need > self.num_blocks - self.used_blocks():
+            return False
+        self.extend(sid, k, v, n_new)
+        return True
+
     def ensure_tail_room(self, sid: str) -> None:
         """Guarantee the next appended token has a destination block
         (the resident headroom makes this draw infallible)."""

@@ -35,6 +35,12 @@ tiny zoo models on CPU, same code on TPU pods) under the same
     overloaded for the resume, the parked KV is *replicated* to the
     likely overflow target so the resume still hits cache.  Copies are
     real block transfers that overlap the (virtual-time) tool gap.
+  * **Disaggregated prefill/decode pools** (opt-in via
+    ``SAGAConfig.disaggregate``; ``repro.serving.disagg``) — engines
+    split into prefill/decode roles: new-session and tool-resume
+    prefills run on the prefill pool (speculatively, overlapping the
+    tool gap) and the staged KV hands off block-granularly to the
+    Eq. 7-routed decode engine, so decode rounds run prefill-free.
 
 Fault tolerance and preemption (the simulator's lifecycle, on real
 engines):
@@ -82,6 +88,9 @@ from repro.configs.base import ModelConfig
 from repro.core.coordinator import GlobalCoordinator, SAGAConfig
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.tracer import ROOT, as_tracer
+from repro.serving.disagg import (HandoffJob, PrefillScheduler,
+                                  ROLE_DECODE, ROLE_PREFILL, ROLE_UNIFIED,
+                                  default_roles)
 from repro.serving.engine import Engine
 from repro.serving.events import EventLoop, SessionQueue, _RuntimeQueueView
 from repro.serving.sanitizer import RuntimeSanitizer
@@ -115,6 +124,24 @@ class RuntimePerf:
     epoch_s: float = 0.100               # coordinator tick (§6)
     migration_mean_s: float = 0.230      # Llumnix-style KV move (Table 7)
     migration_p95_s: float = 0.890
+    # prefill/decode interference: each in-flight prefill on an engine
+    # stretches its concurrent batched decode rounds by this fraction
+    # (chunked-prefill contention — the cost disaggregation removes).
+    # 0.0 keeps every committed fingerprint byte-identical.
+    prefill_round_interference: float = 0.0
+    # the symmetric half of chunked-prefill contention: a prefill
+    # admitted to an engine already running decode rounds is itself
+    # chunked into the round schedule, stretching by this fraction per
+    # active decode slot.  Dedicated prefill engines have no decode
+    # slots, so the disaggregated pool runs prefill at full rate —
+    # the capacity argument for disaggregation.  Default 0.0 keeps
+    # every committed fingerprint byte-identical.
+    prefill_decode_interference: float = 0.0
+    # disaggregated handoff transport (prefill -> decode pool): a
+    # deterministic bandwidth + latency-floor window, like migration but
+    # RNG-free so disagg summaries stay byte-identical across processes
+    handoff_bytes_per_s: float = 8.0e9
+    handoff_latency_s: float = 0.002
 
     def sample_migration_s(self, rng: random.Random) -> float:
         mu = math.log(self.migration_mean_s) - 0.3
@@ -149,6 +176,14 @@ class SessionState:
     step_start_len: int = 0
     mid_step: bool = False
     work_charged: float = 0.0
+    # disaggregated handoff rendezvous (serving/disagg.py): the step's
+    # prefilled KV landed on decode engine ``handoff_dst`` and admission
+    # there needs zero critical-path prefill; ``handoff_lost`` marks a
+    # fault/capacity casualty that must regenerate on the decode engine
+    # WITHOUT re-counting the step's hit/miss verdict
+    handoff_ready: bool = False
+    handoff_dst: int = -1
+    handoff_lost: bool = False
 
     @property
     def tct(self) -> float:
@@ -239,6 +274,7 @@ class ServingRuntime:
                  straggler_slowdown: float = 4.0,
                  sanitize: Optional[bool] = None,
                  paged: bool = True,
+                 roles: Optional[Sequence[str]] = None,
                  trace=None):
         self.cfg = cfg
         self.params = params
@@ -253,6 +289,30 @@ class ServingRuntime:
         pool_bytes = pool.num_blocks * pool.bytes_per_block
         self.co = GlobalCoordinator(saga or SAGAConfig(), self.n_workers,
                                     pool_bytes)
+        # disaggregated prefill/decode pools (serving/disagg.py):
+        # opt-in via SAGAConfig.disaggregate — the unified pool stays
+        # the default so every committed fingerprint is unchanged
+        self.disagg = bool(self.co.cfg.disaggregate)
+        if self.disagg:
+            if roles is None:
+                roles = default_roles(self.n_workers)
+            assert all(self.engines[w].paged
+                       for w in range(self.n_workers)
+                       if roles[w] == ROLE_PREFILL), \
+                "disaggregation needs paged engines (block handoff)"
+        self.roles: List[str] = list(roles) if roles is not None \
+            else [ROLE_UNIFIED] * self.n_workers
+        assert len(self.roles) == self.n_workers
+        self._prefill_ids = [w for w, r in enumerate(self.roles)
+                             if r == ROLE_PREFILL]
+        if self._prefill_ids and not self.disagg:
+            raise ValueError("prefill-role engines need "
+                             "SAGAConfig.disaggregate=True")
+        if self.disagg and not any(r != ROLE_PREFILL for r in self.roles):
+            raise ValueError("disaggregation needs a decode engine")
+        for w in self._prefill_ids:
+            self.co.set_worker_role(w, ROLE_PREFILL)
+        self._pf = PrefillScheduler(self._prefill_ids)
         self.perf = perf or RuntimePerf()
         self.perf = dataclasses.replace(self.perf,
                                         epoch_s=self.co.cfg.epoch_s)
@@ -333,6 +393,13 @@ class ServingRuntime:
         self.cancelled_attempts = 0
         self.preempted = 0
         self.afs_dev_max = 0.0
+        # disaggregated-handoff instrumentation (stats / summarize; the
+        # obs counters kv_handoff_bytes / handoff_count mirror these on
+        # traced runs)
+        self.handoffs = 0
+        self.kv_handoff_bytes = 0
+        self.handoffs_cancelled = 0
+        self.prefetch_role_rejected = 0
         for w in range(self.n_workers):
             self.co.on_worker_idle(w, 0.0)
 
@@ -458,12 +525,26 @@ class ServingRuntime:
                        step=ses.step_idx)
         self._redispatch(sid)
 
+    def _decode_alive(self) -> bool:
+        """Any engine that can hold decode slots up?  (Prefill-role
+        engines cannot: a cluster where only they survive is DOWN for
+        dispatch purposes — ``route`` masks them, so routing with no
+        live decode engine would orphan sessions onto index 0.)"""
+        return any(self._alive[w] for w in range(self.n_workers)
+                   if self.roles[w] != ROLE_PREFILL)
+
     def _redispatch(self, sid: str) -> None:
         """Route to a live engine, or park in the orphan buffer when the
         whole cluster is down (readmitted on the next recover/scale-up,
-        same as the simulator)."""
-        if not any(self._alive):
-            self.sessions[sid].state = "queued"
+        same as the simulator).  Disaggregated mode first checks the
+        handoff rendezvous: landed KV dispatches straight to its decode
+        engine, an in-flight job flips to ``waiting`` (the handoff event
+        dispatches the session the moment the blocks arrive), and a
+        fresh step submits to the prefill pool."""
+        ses = self.sessions[sid]
+        if not (self._decode_alive() if self.disagg
+                else any(self._alive)):
+            ses.state = "queued"
             self._orphans.append(sid)
             # the whole cluster is down: the wait still counts as queue
             # time (engine=-1); a pre-existing queue span keeps running
@@ -472,6 +553,35 @@ class ServingRuntime:
                 self._tr_begin(sid, "queue", "queue_wait",
                                parent_key="step", engine=-1)
             return
+        if self.disagg and not ses.mid_step:
+            d = ses.handoff_dst
+            if ses.handoff_ready and 0 <= d < self.n_workers \
+                    and self._alive[d] and self.engines[d].has_cache(sid):
+                self._dispatch_to(sid, d)
+                return
+            job = self._pf.jobs.get(sid)
+            if job is not None:
+                # tool gap ended before the staged KV landed: wait at
+                # the rendezvous (no decode queue slot consumed)
+                ses.state = "queued"
+                ses.engine = -1
+                ses.slot = -1
+                if self.tracer is not None \
+                        and "queue" not in self._tr_open.get(sid, {}):
+                    self._tr_begin(sid, "queue", "queue_wait",
+                                   parent_key="step", engine=-1)
+                job.waiting = True
+                return
+            if not ses.handoff_ready and not ses.handoff_lost:
+                self._begin_prefill(sid)
+                return
+            # stale rendezvous (dst died, or the import lost the
+            # capacity race): classic decode-pool dispatch below — the
+            # target engine regenerates (§3.1); _admit sees the
+            # handoff_lost flag and skips re-counting the verdict
+            ses.handoff_ready = False
+            ses.handoff_dst = -1
+            ses.handoff_lost = True
         w = self.co.route(sid, self.loads(), self.ev.now)
         self._dispatch_to(sid, w)
 
@@ -551,22 +661,44 @@ class ServingRuntime:
         eng = self.engines[w]
         ctx_len = len(ses.ctx)
         self.co.afs.note_unblocked(sid)
-        hit, pf_tokens, bg_tokens = self.co.on_step_start(
-            sid, w, float(ctx_len), self.ev.now)
-        real_hit = hit and eng.has_cache(sid)
-        if hit and not real_hit:
-            # policy says cached but the blocks are gone (force-freed
-            # making room for a park): heal the metadata
-            self.co.drop_entry(sid, w, count_eviction=False)
-        if not hit and eng.has_cache(sid):
-            eng.evict_session(sid)           # policy evicted it earlier
-        if real_hit:
-            virt_prefill = float(pf_tokens)
+        if self.disagg and ses.handoff_ready and eng.has_cache(sid) \
+                and int(eng.pool.lens.get(sid, -1)) == ctx_len:
+            # the step's KV already landed via the prefill pool: the
+            # hit/miss verdict was counted when the handoff job was
+            # created, so admission here is a zero-prefill slot join
+            # (mark_resident + empty delta)
+            real_hit = True
+            virt_prefill = 0.0
+        elif self.disagg and (ses.handoff_ready or ses.handoff_lost):
+            # rendezvous went stale between landing and admission (dst
+            # died / import lost the capacity race): regenerate the
+            # missing suffix here WITHOUT re-counting the step's verdict
+            real_hit = eng.has_cache(sid)
+            n_have = int(eng.pool.lens.get(sid, 0)) if real_hit else 0
+            if not real_hit:
+                ses.regen_tokens += ctx_len
+            virt_prefill = float(ctx_len - n_have)
         else:
-            ses.regen_tokens += ctx_len
-            # a correct, warm speculative prefetch regenerated
-            # ``bg_tokens`` during the tool gap — off the critical path
-            virt_prefill = float(ctx_len) - float(bg_tokens)
+            hit, pf_tokens, bg_tokens = self.co.on_step_start(
+                sid, w, float(ctx_len), self.ev.now)
+            real_hit = hit and eng.has_cache(sid)
+            if hit and not real_hit:
+                # policy says cached but the blocks are gone (force-freed
+                # making room for a park): heal the metadata
+                self.co.drop_entry(sid, w, count_eviction=False)
+            if not hit and eng.has_cache(sid):
+                eng.evict_session(sid)       # policy evicted it earlier
+            if real_hit:
+                virt_prefill = float(pf_tokens)
+            else:
+                ses.regen_tokens += ctx_len
+                # a correct, warm speculative prefetch regenerated
+                # ``bg_tokens`` during the tool gap — off the critical
+                # path
+                virt_prefill = float(ctx_len) - float(bg_tokens)
+        ses.handoff_ready = False
+        ses.handoff_dst = -1
+        ses.handoff_lost = False
         ses.state = "prefill"
         ses.engine = w
         ses.slot = -1                        # assigned at prefill_done
@@ -576,9 +708,17 @@ class ServingRuntime:
         self._resident[w] += 1
         self._load_delta(w, 1)
         pf_s = max(0.0, virt_prefill) * self._speed_factor(w) \
-            / self.perf.prefill_tokens_per_s
+            / self.perf.prefill_tokens_per_s \
+            * (1.0 + self.perf.prefill_decode_interference
+               * len(self._active[w]))
         self._tr_end(sid, "queue")
-        self._tr_begin(sid, "phase", "resume" if real_hit else "prefill",
+        # span naming: "resume" is reserved for resumed steps so the
+        # report's TTFT-on-resume counts the same population in unified
+        # and disagg runs — a first-step admission whose KV landed via
+        # the prefill pool is still an (off-engine) prefill, not a resume
+        self._tr_begin(sid, "phase",
+                       "resume" if real_hit and ses.step_idx > 0
+                       else "prefill",
                        parent_key="step", engine=w, attempt=ses.attempt)
         if self.obs_metrics is not None:
             self.obs_metrics.histogram("prefill_s").observe(
@@ -593,6 +733,19 @@ class ServingRuntime:
     def _speed_factor(self, w: int) -> float:
         """Straggler slowdown factor for engine ``w`` (>1 = slow)."""
         return self._slow.get(w, 1.0)
+
+    def _round_s(self, w: int) -> float:
+        """Duration of the next batched decode round on ``w``: base rate
+        x straggler factor x chunked-prefill interference — each session
+        in prefill phase on the engine (``_resident`` minus the decode
+        set) stretches the round by ``prefill_round_interference``.  The
+        default coefficient 0.0 keeps every committed fingerprint
+        byte-identical; the disagg A/B turns it on in BOTH arms, and the
+        prefill pool wins exactly because its decode engines run
+        (nearly) prefill-free rounds."""
+        stretch = 1.0 + self.perf.prefill_round_interference \
+            * max(0, self._resident[w] - len(self._active[w]))
+        return self.perf.decode_round_s * self._speed_factor(w) * stretch
 
     def _on_prefill_done(self, sid: str, attempt: int = -1) -> None:
         rec = self.inflight.get(sid)
@@ -625,12 +778,11 @@ class ServingRuntime:
         self._active[w].add(sid)
         if not self._round_live[w]:
             self._round_live[w] = True
-            self.ev.schedule(
-                self.ev.now
-                + self.perf.decode_round_s * self._speed_factor(w),
-                "round", (w, self._gen[w]))
+            dur = self._round_s(w)
+            self.ev.schedule(self.ev.now + dur, "round",
+                             (w, self._gen[w], dur))
 
-    def _on_round(self, w: int, gen: int = 0) -> None:
+    def _on_round(self, w: int, gen: int = 0, dur: float = -1.0) -> None:
         """One continuous-batching decode round: every decode-phase
         session on engine ``w`` advances one token in a single batched
         forward pass.  Sessions whose step completed leave the batch
@@ -652,7 +804,10 @@ class ServingRuntime:
         slot_tokens = {self.sessions[s].slot: self.sessions[s].next_token
                        for s in active}
         out = eng.decode(slot_tokens, n_steps=1)
-        round_s = self.perf.decode_round_s * self._speed_factor(w)
+        # the round's duration was fixed at schedule time (interference
+        # snapshot); the legacy fallback covers replayed two-arg events
+        round_s = dur if dur > 0.0 \
+            else self.perf.decode_round_s * self._speed_factor(w)
         finished: List[str] = []
         for sid in active:
             ses = self.sessions[sid]
@@ -685,10 +840,9 @@ class ServingRuntime:
         if victim is not None and victim in self._active[w]:
             self._preempt_now(victim, w)
         if self._active[w]:
-            self.ev.schedule(
-                self.ev.now
-                + self.perf.decode_round_s * self._speed_factor(w),
-                "round", (w, self._gen[w]))
+            nxt = self._round_s(w)
+            self.ev.schedule(self.ev.now + nxt, "round",
+                             (w, self._gen[w], nxt))
         else:
             self._round_live[w] = False
         self._drain_queue(w)
@@ -745,6 +899,12 @@ class ServingRuntime:
         if job is not None and job.issued_at == self.ev.now:
             self.ev.schedule(job.ready_at, "prefetch", (sid, w))
         self.ev.schedule(self.ev.now + float(gap_s), "tool_done", (sid,))
+        if self.disagg:
+            # speculative PREFILL: the park boundary just resolved the
+            # next step (``resolve_next`` above), so its prompt is known
+            # — submit the prefill job now and overlap compute + handoff
+            # with the tool gap (generalizes speculative prefetch)
+            self._begin_prefill(sid, speculative=True)
 
     def _park_real(self, sid: str, w: int) -> bool:
         """Move the session's slot KV into the engine pool, evicting
@@ -840,6 +1000,241 @@ class ServingRuntime:
         self._tr_end(sid, "step")
         ses.step_idx += 1
         self._begin_step(sid)
+
+    # -- disaggregated prefill pool (serving/disagg.py) -----------------
+    def _begin_prefill(self, sid: str, speculative: bool = False) -> None:
+        """Submit one step's prefill to the prefill pool.  Speculative
+        (park boundary): the next step's prompt is already resolved, so
+        the job covers ctx + next prompt and the compute + handoff
+        overlap the tool gap.  Non-speculative (gap over, nothing in
+        flight): the session waits at the rendezvous while the pool
+        computes.  The Eq. 7 route taken HERE is the step's decode
+        placement; the hit/miss verdict is counted once, now.  Falls
+        back to classic decode-pool dispatch when the prefill pool is
+        down or the context cannot fit any staging pool."""
+        ses = self.sessions[sid]
+        if speculative:
+            if sid in self._pf.jobs:
+                return                        # already in flight
+            nxt = ses.inst.rt_step(ses.step_idx + 1)[0]
+            tokens = list(ses.ctx) + [int(t) for t in nxt]
+        else:
+            tokens = list(ses.ctx)
+        pools = [e.pool for e in self.engines]
+        fits = any(self._alive[p] and pools[p]._blocks_for(len(tokens))
+                   <= pools[p].num_blocks for p in self._prefill_ids)
+        if not fits:
+            # whole prefill pool down (or context larger than every
+            # staging pool): unified-style dispatch keeps sessions
+            # moving instead of stalling on the rendezvous
+            if not speculative:
+                w = self.co.route(sid, self.loads(), self.ev.now)
+                self._dispatch_to(sid, w)
+            return
+        d = self.co.route(sid, self.loads(), self.ev.now)
+        self.co.afs.note_unblocked(sid)
+        hit, pf_tokens, bg_tokens = self.co.on_step_start(
+            sid, d, float(len(tokens)), self.ev.now)
+        eng_d = self.engines[d]
+        real_hit = hit and eng_d.has_cache(sid)
+        if hit and not real_hit:
+            self.co.drop_entry(sid, d, count_eviction=False)
+        if not hit and eng_d.has_cache(sid):
+            eng_d.evict_session(sid)
+        if real_hit:
+            start = int(eng_d.pool.lens[sid])
+            virt = float(pf_tokens)
+        else:
+            start = 0
+            ses.regen_tokens += len(tokens)
+            virt = float(len(tokens)) - float(bg_tokens)
+        job = HandoffJob(session_id=sid, attempt=next(self._attempt),
+                         d_engine=d, start=start, tokens=tokens,
+                         pf_tokens=max(0.0, virt),
+                         speculative=speculative,
+                         waiting=not speculative)
+        self._pf.submit(job)
+        if not speculative:
+            ses.state = "queued"
+            ses.engine = -1
+            ses.slot = -1
+            if self.tracer is not None \
+                    and "queue" not in self._tr_open.get(sid, {}):
+                self._tr_begin(sid, "queue", "queue_wait",
+                               parent_key="step", engine=-1)
+        self._pf_place(job)
+
+    def _pf_place(self, job: HandoffJob) -> None:
+        got = self._pf.place(job, self.ev.now,
+                             [e.pool for e in self.engines], self._alive)
+        if got is None:
+            self._pf.defer(job)       # retried as staged blocks release
+            return
+        self._pf_launch(job, got[0], got[1])
+
+    def _pf_launch(self, job: HandoffJob, p: int, t0: float) -> None:
+        """Open the (virtual) prefill compute window on engine ``p``;
+        the REAL forward pass runs when ``pf_done`` is processed, so a
+        fault before then loses no staged blocks."""
+        ses = self.sessions[job.session_id]
+        pf_s = job.pf_tokens * self._speed_factor(p) \
+            / self.perf.prefill_tokens_per_s
+        self._pf.note_busy_until(p, t0 + pf_s)
+        self.co.afs.note_service(ses.inst.tenant, pf_s)
+        self.ev.schedule(t0 + pf_s, "pf_done",
+                         (job.session_id, job.attempt))
+
+    def _pf_drain(self) -> None:
+        """Re-try deferred prefill jobs (staged blocks released, or a
+        prefill engine recovered) — FIFO, deterministic."""
+        for job, p, t0 in self._pf.drain(self.ev.now,
+                                         [e.pool for e in self.engines],
+                                         self._alive):
+            self._pf_launch(job, p, t0)
+
+    def _on_pf_done(self, sid: str, attempt: int = -1) -> None:
+        """The prefill compute window elapsed: run the REAL delta
+        prefill on the prefill engine, stage the blocks in its pool, and
+        open the deterministic transfer window to the decode engine."""
+        job = self._pf.jobs.get(sid)
+        if job is None or job.attempt != attempt:
+            return       # stale: cancelled by a fault in the meantime
+        p = job.p_engine
+        if not self.engines[p].stage_prefill(
+                sid, np.asarray(job.tokens, np.int32), job.start):
+            raise RuntimeError(
+                f"staging pool reservation drifted on engine {p}")
+        self._pf.staged(job, [e.pool for e in self.engines])
+        tr_s = job.n_stage * self.kv_bytes_per_token \
+            / self.perf.handoff_bytes_per_s + self.perf.handoff_latency_s
+        self._tr_begin(sid, "handoff", "handoff", parent_key="session",
+                       src=p, dst=job.d_engine, tokens=job.n_stage)
+        self.ev.schedule(self.ev.now + tr_s, "handoff_done",
+                         (sid, attempt))
+
+    def _handoff_abort(self, job: HandoffJob, status: str) -> None:
+        """Reclaim both sides of a dead handoff attempt: staged blocks
+        on a live prefill engine free through its pool (a dead one's
+        were already wiped by ``Engine.fail``), an unstaged job returns
+        its block reservation, and the registry forgets the attempt so
+        its pending pf_done/handoff_done events go stale."""
+        sid = job.session_id
+        if job.state == "staged" and 0 <= job.p_engine < self.n_workers \
+                and self._alive[job.p_engine] \
+                and self.engines[job.p_engine].has_cache(sid):
+            self.engines[job.p_engine].evict_session(sid)
+        self._pf.unreserve(job, [e.pool for e in self.engines])
+        self._pf.pop(sid)
+        self.handoffs_cancelled += 1
+        self._tr_end(sid, "handoff", status=status)
+
+    def _on_handoff_done(self, sid: str, attempt: int = -1) -> None:
+        """The transfer window elapsed: move the staged blocks into the
+        decode engine's pool (evicting WA-LRU victims to make room) and
+        arm the rendezvous — or unwind the attempt if the decode side
+        changed underneath it."""
+        job = self._pf.jobs.get(sid)
+        if job is None or job.attempt != attempt:
+            return       # stale: cancelled by a fault in the meantime
+        ses = self.sessions[sid]
+        p = job.p_engine
+        d = job.d_engine
+        if not self._alive[d]:
+            if job.start == 0 and self._decode_alive():
+                # full-context KV is placement-free: land it on a live
+                # decode engine instead (Eq. 7 re-route)
+                d = job.d_engine = self.co.route(sid, self.loads(),
+                                                 self.ev.now)
+            else:
+                # the delta's prefix died with its decode engine (or no
+                # decode engine survives): reclaim both sides; a waiting
+                # session re-prefills on a live engine via _redispatch
+                self._handoff_abort(job, "cancelled")
+                self._pf_drain()
+                if job.waiting:
+                    self._redispatch(sid)
+                return
+        eng_d = self.engines[d]
+        append = job.start > 0
+        if append and int(eng_d.pool.lens.get(sid, -1)) != job.start:
+            # the parked prefix this delta extends was evicted mid-
+            # flight: the staged KV no longer lines up — re-prefill
+            self._handoff_abort(job, "cancelled")
+            self._pf_drain()
+            if job.waiting:
+                self._redispatch(sid)
+            return
+        k, v, n = self.engines[p].export_kv(sid)
+        while not eng_d.import_handoff(sid, k, v, n, append=append):
+            victim = self.co.pools[d].select_victim(self.ev.now)
+            if victim is None or victim.session_id == sid:
+                # no evictable room at the decode engine: drop the
+                # attempt, the session regenerates there (§3.1)
+                self._handoff_abort(job, "lost")
+                ses.handoff_lost = True
+                self._pf_drain()
+                if job.waiting:
+                    self._dispatch_to(sid, d)
+                return
+            self.co.drop_entry(victim.session_id, d)
+            eng_d.evict_session(victim.session_id)
+        self.engines[p].evict_session(sid)    # release the source side
+        if not append:
+            # miss-path landing: create the decode-side TTL entry (hit
+            # landings extend the existing pinned entry's blocks)
+            inserted, evicted = self.co.handoff_land(
+                sid, d, float(len(job.tokens)),
+                len(job.tokens) * self.kv_bytes_per_token, self.ev.now)
+            for evd in evicted:
+                eng_d.evict_session(evd.session_id)
+            if not inserted:
+                # only pinned victims at d: the landed blocks must not
+                # outlive their metadata (the migration-landing rule)
+                eng_d.evict_session(sid)
+                self._handoff_abort(job, "lost")
+                ses.handoff_lost = True
+                self._pf_drain()
+                if job.waiting:
+                    self._dispatch_to(sid, d)
+                return
+        hbytes = n * self.kv_bytes_per_token
+        self.handoffs += 1
+        self.kv_handoff_bytes += hbytes
+        if self.obs_metrics is not None:
+            self.obs_metrics.counter("handoff_count").inc(1)
+            self.obs_metrics.counter("kv_handoff_bytes").inc(hbytes)
+        self._tr_end(sid, "handoff", tokens=n)
+        self._pf.pop(sid)
+        ses.handoff_ready = True
+        ses.handoff_dst = d
+        self._pf_drain()
+        if job.waiting:
+            self._dispatch_to(sid, d)
+
+    def _pf_fail_engine(self, w: int) -> None:
+        """A dead engine's side of the handoff lifecycle: every job
+        computing on or staged on ``w`` is cancelled (``Engine.fail``
+        already freed the blocks; the attempt-stamped registry makes the
+        pending pf_done/handoff_done events stale) and waiting sessions
+        re-prefill on a live engine.  Jobs whose DECODE side is ``w``
+        are resolved lazily at handoff_done (re-route or cancel)."""
+        waiting: List[str] = []
+        for job in self._pf.jobs_touching(w):
+            if job.p_engine != w:
+                continue
+            self._handoff_abort(job, "cancelled")
+            if job.waiting:
+                waiting.append(job.session_id)
+        for sid in sorted(waiting):
+            self._redispatch(sid)
+        self._pf_drain()
+
+    def _handoff_staged(self, w: int) -> set:
+        """Sessions whose in-transit handoff blocks live on engine ``w``
+        (staged in the prefill pool — deliberately carrying no
+        coordinator pool metadata): the sanitizer / mirror-check
+        exemption set."""
+        return self._pf.staged_on(w) if self.disagg else set()
 
     # -- epoch tick: AFS shares + work stealing + preemption ------------
     def _on_epoch(self) -> None:
@@ -1062,6 +1457,20 @@ class ServingRuntime:
         for i, alive in enumerate(self._alive):
             if not alive:                     # a dead engine's zero load
                 masked[i] = INF               # must not attract replicas
+        if self.disagg and self._prefill_ids:
+            # decode-pool KV must never replicate into a prefill
+            # engine's staging pool — and prefill engines idle at load 0
+            # would otherwise win every argmin below
+            had_live = math.isfinite(float(masked.min()))
+            for i in self._prefill_ids:
+                masked[i] = INF
+            if not math.isfinite(float(masked.min())):
+                if had_live:
+                    # the only overflow candidates were prefill engines:
+                    # the prediction is unusable — count it as waste
+                    self.co.prefetcher.cancel(sid)
+                    self.prefetch_role_rejected += 1
+                return
         if not math.isfinite(float(masked.min())):
             return
         dst = int(masked.argmin())
@@ -1120,6 +1529,10 @@ class ServingRuntime:
         # real replication copies sourced from the dead pool die with it
         self.co.prefetcher.cancel_worker(w)
         self.engines[w].fail()
+        if self.disagg:
+            # handoff jobs computing/staged on the dead engine cancel,
+            # reclaim both sides, and re-prefill on a live engine
+            self._pf_fail_engine(w)
         tickets = self.queues[w].drain()
         if tickets:
             self._load_delta(w, -len(tickets))
@@ -1168,6 +1581,8 @@ class ServingRuntime:
             return                           # already up (storm overlap)
         self._alive[w] = True
         self.co.worker_recovered(w, self.ev.now)
+        if self.disagg:
+            self._pf_drain()     # deferred jobs may fit the pool again
         self._readmit_orphans()
 
     def _scale_up(self) -> None:
@@ -1181,6 +1596,9 @@ class ServingRuntime:
                      block_size=ref.pool.block, env=ref.env,
                      paged=ref.paged)
         self.engines.append(eng)
+        # elastic capacity always joins the DECODE side: prefill-pool
+        # sizing is a deployment-time choice (roles at construction)
+        self.roles.append(ROLE_DECODE if self.disagg else ROLE_UNIFIED)
         w = self.co.add_worker(self.ev.now)
         self.queues.append(SessionQueue())
         self._queue_views.append(
@@ -1222,6 +1640,12 @@ class ServingRuntime:
             "cancelled_attempts": int(self.cancelled_attempts),
             "preemptions": int(self.preempted),
             "afs_dev_max": float(self.afs_dev_max),
+            # disaggregated prefill/decode handoff (0s in unified mode)
+            "kv_handoff_bytes": int(sum(e.handoff_copy_bytes
+                                        for e in self.engines)),
+            "handoff_count": int(self.handoffs),
+            "handoffs_cancelled": int(self.handoffs_cancelled),
+            "prefetch_role_rejected": int(self.prefetch_role_rejected),
         }
 
     def summarize(self) -> dict:
@@ -1261,6 +1685,17 @@ class ServingRuntime:
             out["cancelled_attempts"] = int(self.cancelled_attempts)
             out["preemptions"] = int(self.preempted)
             out["afs_dev_max"] = float(self.afs_dev_max)
+        if self.disagg:
+            # disagg keys only in disagg mode (same rule as above): the
+            # unified summary's byte-pins stay valid
+            out["handoffs"] = int(self.handoffs)
+            out["handoff_bytes"] = float(self.kv_handoff_bytes)
+            out["handoffs_cancelled"] = int(self.handoffs_cancelled)
+            out["prefill_jobs"] = int(self._pf.submitted)
+            out["speculative_prefills"] = int(self._pf.speculative)
+            out["prefill_deferred"] = int(self._pf.deferred)
+            out["prefetch_role_rejected"] = \
+                int(self.prefetch_role_rejected)
         return out
 
     # -- invariants -----------------------------------------------------
@@ -1313,6 +1748,21 @@ class ServingRuntime:
                 bad.append(f"engine {w} pool metadata not empty")
         if abs(self.co.pools_used) > 1e-6:
             bad.append(f"pools_used={self.co.pools_used}")
+        if self.disagg:
+            if self._pf.jobs:
+                bad.append(f"handoff jobs in limbo: "
+                           f"{sorted(self._pf.jobs)[:5]}")
+            if self._pf.pending:
+                bad.append(f"prefill jobs never placed: "
+                           f"{self._pf.pending[:5]}")
+            resv = {p: r for p, r in sorted(self._pf.reserved.items())
+                    if r}
+            if resv:
+                bad.append(f"staging reservations leaked: {resv}")
+            stuck = sorted(s for s, st in self.sessions.items()
+                           if st.handoff_ready or st.handoff_lost)
+            if stuck:
+                bad.append(f"handoff flags never consumed: {stuck[:5]}")
         if bad:
             raise RuntimeError("runtime conservation violated: "
                                + "; ".join(bad))
@@ -1323,10 +1773,12 @@ class ServingRuntime:
         may transiently outlive its blocks during a resume, never the
         reverse).  Resident sessions are exempt: a cache-miss admit
         holds blocks from admit to finish with no coordinator entry
-        until its first park."""
+        until its first park.  In-transit handoff blocks staged on a
+        prefill engine are likewise exempt — the cross-pool transfer
+        deliberately carries no coordinator metadata until it lands."""
         for w, eng in enumerate(self.engines):
             extra = (set(eng.pool.tables) - set(self.co.pools[w].entries)
-                     - eng.pool.resident)
+                     - eng.pool.resident - self._handoff_staged(w))
             if extra:
                 raise RuntimeError(
                     f"engine {w} holds blocks with no pool entry: "

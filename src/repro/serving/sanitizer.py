@@ -21,7 +21,11 @@ after *every* dispatched event, shadow-auditing:
     the session records; queued tickets reference queued sessions;
   * **policy/real mirror** — parked blocks are a subset of the
     coordinator's pool metadata (the invariant behind
-    ``verify_pool_mirrors``).
+    ``verify_pool_mirrors``);
+  * **cross-pool in-transit state** (disaggregated mode) — every staged
+    handoff job's blocks really exist on its prefill engine with the
+    staged token count, unstaged jobs hold only a reservation, and no
+    reservation ever goes negative.
 
 Violations raise :class:`SanitizerError` naming the event (kind, args,
 virtual time) plus the owning session and attempt.  The sanitizer only
@@ -112,10 +116,14 @@ class RuntimeSanitizer:
             # policy/real mirror: parked blocks ⊆ coordinator metadata.
             # Resident sessions are exempt — block ownership spans
             # admit→finish in paged mode, and a cache-miss admit has no
-            # coordinator entry until its first park.
+            # coordinator entry until its first park.  So are in-transit
+            # handoff blocks staged on a prefill engine: the cross-pool
+            # transfer deliberately carries no coordinator metadata
+            # until it lands on the decode side.
             extra = sorted(set(eng.pool.tables)
                            - set(rt.co.pools[w].entries)
-                           - eng.pool.resident)
+                           - eng.pool.resident
+                           - rt._handoff_staged(w))
             if extra:
                 who = ", ".join(f"{s!r}{self._attempt(s)}"
                                 for s in extra[:5])
@@ -164,6 +172,34 @@ class RuntimeSanitizer:
                 errs.append(f"inflight stamp ({ew}, {att}) stale vs "
                             f"session (engine={ses.engine}, "
                             f"attempt={ses.attempt}) for {sid!r}")
+        if rt.disagg:
+            # cross-pool in-transit state: a staged job's blocks really
+            # exist on its prefill engine with exactly the staged token
+            # count; placed-but-unstaged jobs hold a reservation on a
+            # prefill engine; pending jobs hold nothing anywhere
+            for sid, job in sorted(rt._pf.jobs.items()):
+                p = job.p_engine
+                if job.state == "staged":
+                    pool = rt.engines[p].pool
+                    if pool.lens.get(sid) != job.n_stage:
+                        errs.append(
+                            f"handoff job {sid!r}: staged on engine {p} "
+                            f"but pool holds "
+                            f"{pool.lens.get(sid)} tokens, job staged "
+                            f"{job.n_stage}")
+                elif job.state == "prefill":
+                    if p not in rt._pf.reserved or p < 0:
+                        errs.append(f"handoff job {sid!r}: placed on "
+                                    f"non-prefill engine {p}")
+                elif job.state == "pending":
+                    if p != -1 or sid not in rt._pf.pending:
+                        errs.append(f"handoff job {sid!r}: pending but "
+                                    f"p_engine={p}, in FIFO: "
+                                    f"{sid in rt._pf.pending}")
+            for p, r in sorted(rt._pf.reserved.items()):
+                if r < 0:
+                    errs.append(f"engine {p}: negative staging "
+                                f"reservation {r}")
         if errs:
             raise SanitizerError(
                 f"sanitizer: conservation violated after event "

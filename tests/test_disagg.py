@@ -1,0 +1,185 @@
+"""Disaggregated prefill/decode pool tests: unified-vs-disagg token
+identity, chaos conservation with a prefill engine dying mid-handoff,
+cross-process byte-identical summaries, and role plumbing."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.models import lm
+from repro.serving.disagg import (ROLE_DECODE, ROLE_PREFILL,
+                                  default_roles)
+from repro.serving.runtime import (AgentRequest, RuntimePerf,
+                                   ServingRuntime)
+
+load_all()
+CFG = get_config("micro")
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+TOOLS = ["code_execution", "web_api", "file_operations"]
+
+
+def _mk_requests(n, n_steps=3, seed=0, prompt_len=8, n_out=4):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        steps = [(list(map(int, rng.randint(1, CFG.vocab,
+                                            size=prompt_len))),
+                  n_out, TOOLS[s % 3], float(rng.uniform(0.05, 0.5)))
+                 for s in range(n_steps)]
+        reqs.append(AgentRequest(f"s{i}", f"t{i % 3}", steps))
+    return reqs
+
+
+def _run(reqs, disagg, **kw):
+    """Ample-slot config: like ``test_interleaved_matches_serial``, the
+    exactness tests run in the regime where no session is ever evicted
+    or diverted off its KV home — under overload the policies trade
+    regeneration (low-order float bits differ from incrementally-built
+    KV) for throughput, which the benchmarks measure, not these gates."""
+    kw.setdefault("n_workers", 3)
+    kw.setdefault("n_slots", 8)
+    kw.setdefault("max_len", 256)
+    kw.setdefault("pool_blocks", 96)
+    kw.setdefault("sanitize", True)
+    kw.setdefault("saga", SAGAConfig(disaggregate=disagg))
+    rt = ServingRuntime(CFG, PARAMS, seed=0, **kw)
+    for r in reqs:
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    rt.verify_pool_mirrors()
+    return rt
+
+
+def test_disagg_matches_unified_tokens():
+    """Splitting engines into prefill/decode roles must not change a
+    single output token: the staged KV is a delta prefill of the same
+    context tokens through the same jitted functions, and the handoff
+    copies blocks bit-exactly."""
+    reqs = _mk_requests(6)
+    uni = _run(_mk_requests(6), disagg=False)
+    dis = _run(reqs, disagg=True)
+    assert uni.n_done == dis.n_done == len(reqs)
+    for r in reqs:
+        a = uni.sessions[r.session_id].step_outputs
+        b = dis.sessions[r.session_id].step_outputs
+        assert a == b, f"outputs diverged for {r.session_id}"
+    s = dis.summarize()
+    assert s["handoffs"] > 0
+    assert s["speculative_prefills"] > 0
+    assert s["handoff_bytes"] > 0.0
+    assert dis.stats()["kv_handoff_bytes"] > 0
+    # the unified summary must not grow disagg keys (fingerprint guard)
+    assert "handoffs" not in uni.summarize()
+    # prefill engines end empty: staging is transient by construction
+    for w in dis._prefill_ids:
+        assert not dis.engines[w].pool.tables
+        assert not dis.co.pools[w].entries
+
+
+def test_disagg_chaos_prefill_death_mid_handoff():
+    """Killing the prefill engine while jobs are in flight must cancel
+    the attempts (stale ``pf_done``/``handoff_done`` events), reclaim
+    blocks on both sides, and re-prefill on recovery — with zero leaks
+    and token-for-token identical outputs, because the staged KV is a
+    pure function of the context tokens."""
+    # slow the prefill stream down so the fault window reliably lands
+    # while handoff jobs are mid-lifecycle
+    perf = RuntimePerf(prefill_tokens_per_s=200.0)
+    plan = [(0.2, "fail", 0), (0.9, "recover", 0)]
+    reqs = _mk_requests(6, n_steps=4, seed=7)
+    calm = _run(_mk_requests(6, n_steps=4, seed=7), disagg=True,
+                n_workers=4, perf=perf)
+    chaos = _run(reqs, disagg=True, n_workers=4, perf=perf,
+                 fault_plan=plan)
+    assert chaos.n_done == len(reqs)
+    s = chaos.summarize()
+    assert s["handoffs_cancelled"] > 0, \
+        "fault plan never hit a mid-flight handoff"
+    for r in reqs:
+        a = calm.sessions[r.session_id].step_outputs
+        b = chaos.sessions[r.session_id].step_outputs
+        assert a == b, f"outputs diverged for {r.session_id}"
+    for w in chaos._prefill_ids:
+        assert not chaos.engines[w].pool.tables
+
+
+def test_disagg_conservation_under_contention():
+    """Overloaded disagg cluster (queueing, deferral, stealing on the
+    decode side, preemption enabled) conserves at every event — the
+    sanitizer audits the cross-pool in-transit state after each one."""
+    perf = RuntimePerf(prefill_tokens_per_s=500.0,
+                       prefill_round_interference=0.15)
+    saga = SAGAConfig(disaggregate=True, enable_preemption=True)
+    rt = _run(_mk_requests(10, n_steps=4, seed=3), disagg=True,
+              n_workers=4, n_slots=2, pool_blocks=64, saga=saga,
+              perf=perf,
+              fault_plan=[(0.15, "fail", 0), (0.3, "fail", 2),
+                          (0.7, "recover", 0), (0.9, "scale_up", 0),
+                          (1.2, "recover", 2)])
+    assert rt.n_done == 10
+    assert rt.summarize()["handoffs"] > 0
+
+
+def test_role_validation():
+    with pytest.raises(ValueError):
+        default_roles(1)
+    # prefill roles without the config flag are a misconfiguration
+    with pytest.raises(ValueError):
+        ServingRuntime(CFG, PARAMS, n_workers=2, n_slots=2,
+                       max_len=256, pool_blocks=32,
+                       roles=[ROLE_PREFILL, ROLE_DECODE])
+    # an all-prefill cluster has nowhere to decode
+    with pytest.raises(ValueError):
+        ServingRuntime(CFG, PARAMS, n_workers=2, n_slots=2,
+                       max_len=256, pool_blocks=32,
+                       saga=SAGAConfig(disaggregate=True),
+                       roles=[ROLE_PREFILL, ROLE_PREFILL])
+
+
+_RUN_SNIPPET = """
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.cluster.workload import runtime_requests
+from repro.models import lm
+from repro.serving.runtime import ServingRuntime
+import jax
+load_all()
+cfg = get_config("micro")
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rt = ServingRuntime(cfg, params, n_workers=3, n_slots=3, max_len=256,
+                    pool_blocks=96, seed=0,
+                    saga=SAGAConfig(disaggregate=True))
+for r in runtime_requests(n_sessions=5, vocab=cfg.vocab, seed=4,
+                          n_steps=2, max_ctx=200):
+    rt.submit(r)
+rt.run()
+rt.check_conservation()
+print(repr(rt.summarize()))
+"""
+
+
+def test_disagg_summary_identical_across_processes():
+    """Disaggregated runs inherit the determinism contract: handoff
+    scheduling, placement and transfer windows are RNG- and hash-order
+    free, so summaries are byte-identical across PYTHONHASHSEED."""
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run([sys.executable, "-c", _RUN_SNIPPET],
+                           env=env, capture_output=True, text=True,
+                           timeout=300)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    assert "'handoffs':" in outs[0] and "'n_done': 5" in outs[0]
