@@ -485,6 +485,48 @@ def _disagg_fingerprint() -> str:
         + _one(fault_plan=[(0.5, "fail", 0), (2.0, "recover", 0)])
 
 
+def _asyncio_fingerprint() -> str:
+    """Fake-clock asyncio identity contract (serving/frontend): the
+    wall-clock driver run under ``FakeClock`` pops the same event heap
+    through the same handlers, so its ``summarize()`` must be
+    byte-identical to the virtual-time clean run — pacing can throttle,
+    never reorder.  Submissions go through the ``SagaClient`` facade to
+    pin that path too."""
+    import asyncio
+
+    from repro.serving.client import SagaClient
+    from repro.serving.frontend import AsyncServingDriver, FakeClock
+
+    load_all()
+    cfg = get_config("micro")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    def _reqs():
+        return runtime_requests(n_sessions=8, vocab=cfg.vocab,
+                                seed=SEED, n_steps=2,
+                                max_ctx=MAX_LEN - 32)
+
+    rt, _ = run_policy(cfg, params, SAGAConfig(), _reqs())
+    virt = repr(rt.summarize())
+
+    art = ServingRuntime(cfg, params, n_workers=N_WORKERS,
+                         saga=SAGAConfig(), n_slots=N_SLOTS,
+                         max_len=MAX_LEN, pool_blocks=POOL_BLOCKS,
+                         seed=SEED, perf=PERF)
+    drv = AsyncServingDriver(art, clock=FakeClock())
+    client = SagaClient.for_driver(drv)
+    for r in _reqs():
+        client.submit(r)
+    asyncio.run(drv.run())
+    art.check_conservation()
+    wall = repr(art.summarize())
+    if wall != virt:
+        raise AssertionError(
+            "asyncio fake-clock summary diverged from virtual time:\n"
+            f"  virtual {virt}\n  asyncio {wall}")
+    return "asyncio " + wall
+
+
 def smoke() -> None:
     """CI gate: 16 concurrent sessions over 2 engines on real forward
     passes — SAGA strictly below request-level regeneration; chaos-mode
@@ -513,6 +555,7 @@ def smoke() -> None:
     d = _disagg_fingerprint()
     assert d == _disagg_fingerprint(), \
         "same-process disagg summaries diverged"
+    z = _asyncio_fingerprint()    # asserts asyncio == virtual inside
     outs = []
     for hashseed in ("0", "424242"):
         env = dict(os.environ)
@@ -523,10 +566,11 @@ def smoke() -> None:
         assert r.returncode == 0, r.stderr
         outs.append(r.stdout)
     assert outs[0] == outs[1], "cross-process summaries diverged"
-    assert a + "\n" + d + "\n" == outs[0], \
+    assert a + "\n" + d + "\n" + z + "\n" == outs[0], \
         "parent/child summaries diverged"
     save_fingerprint("serve_bench", a)
     save_fingerprint("serve_bench_disagg", d)
+    save_fingerprint("serve_bench_asyncio", z)
     print(f"smoke ok: {out['n_sessions']} sessions / {out['n_engines']} "
           f"engines, regen {out['saga']['regen_tokens']} vs "
           f"{out['reqlevel']['regen_tokens']} "
@@ -544,7 +588,8 @@ def smoke() -> None:
           f"vs unified {dz['unified_ttft_resume_p99']:.4f}s "
           f"({dz['ttft_improvement_x']:.2f}x, {dz['handoffs']} handoffs); "
           f"traced run byte-identical ({rep['span_counts']['session']} "
-          f"session span trees closed); determinism green")
+          f"session span trees closed); asyncio fake-clock replay "
+          f"byte-identical; determinism green")
 
 
 def main() -> None:
@@ -557,6 +602,7 @@ def main() -> None:
     if args.smoke_emit:
         print(_fingerprint())
         print(_disagg_fingerprint())
+        print(_asyncio_fingerprint())
         return
     if args.smoke:
         smoke()

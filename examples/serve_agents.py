@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import get_config, load_all
 from repro.core.coordinator import SAGAConfig
 from repro.models import lm
+from repro.serving.client import SagaClient
 from repro.serving.server import AgentRequest, MultiWorkerServer
 
 
@@ -48,10 +49,13 @@ def main():
     for name, saga in configs.items():
         srv = MultiWorkerServer(cfg, params, n_workers=2, saga=saga,
                                 n_slots=3, max_len=512, pool_blocks=96)
+        # SagaClient is the submission surface; run_task is a shim now
+        client = SagaClient.for_server(srv)
         t0 = time.time()
         for req in requests:
-            srv.run_task(req)
-        stats = srv.stats()
+            client.submit(req)
+            client.run()
+        stats = client.stats()
         stats["wall_s"] = time.time() - t0
         results[name] = stats
         print(f"{name}: prefilled={stats['prefill_tokens']} tokens "

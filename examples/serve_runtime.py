@@ -18,6 +18,7 @@ from repro.cluster.workload import runtime_requests
 from repro.configs import get_config, load_all
 from repro.core.coordinator import SAGAConfig
 from repro.models import lm
+from repro.serving.client import SagaClient
 from repro.serving.runtime import RuntimePerf, ServingRuntime
 
 
@@ -42,12 +43,13 @@ def main():
         rt = ServingRuntime(cfg, params, n_workers=2, saga=saga,
                             n_slots=4, max_len=256, pool_blocks=128,
                             perf=perf, seed=0)
+        client = SagaClient.for_runtime(rt)
         t0 = time.time()
         for r in reqs:
-            rt.submit(r)
-        rt.run()
-        rt.check_conservation()
-        s = rt.summarize()
+            client.submit(r)
+        client.run()
+        client.check_conservation()
+        s = client.summarize()
         print(f"{name}: {s['n_done']} sessions, "
               f"tct_mean={s['tct_mean']:.2f}s (virtual), "
               f"regen={s['regen_tokens']} tokens, "

@@ -43,6 +43,11 @@ CLOCK_CALLS = {
     "datetime.now", "datetime.utcnow", "datetime.today",
     "datetime.datetime.now", "datetime.datetime.utcnow",
     "datetime.date.today", "date.today",
+    # asyncio's wall clock by idiomatic receiver name — permitted only
+    # inside repro/serving/frontend via sagalint's SCOPE_EXEMPT
+    # configuration (the asyncio driver's charter), never by pragma
+    "loop.time", "asyncio.get_event_loop.time",
+    "asyncio.get_running_loop.time",
 }
 
 # random-module functions whose call implies the process-global stream

@@ -37,6 +37,16 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 
 SCHED_PKGS = {"core", "cluster", "obs", "serving", "workflow"}
 
+# Scoped rule exemptions (configuration, not pragmas): subpackages whose
+# CHARTER exempts them from specific rules.  serving/frontend is the
+# wall-clock asyncio driver + HTTP proxy — reading real time is its job,
+# so det-clock is off THERE AND ONLY THERE; every other determinism and
+# lifecycle rule still applies.  Keys are "/"-joined path suffixes under
+# the repro package.
+SCOPE_EXEMPT: Dict[str, frozenset] = {
+    "serving/frontend": frozenset({"det-clock"}),
+}
+
 RULES: Dict[str, str] = {
     "det-hash": "builtin hash() on non-ints (use the FNV-1a helpers)",
     "det-set-order": "set/dict.keys() iteration order escaping into an "
@@ -139,6 +149,20 @@ def _determinism_in_scope(path: Path) -> bool:
     return i + 1 < len(parts) - 1 and parts[i + 1] in SCHED_PKGS
 
 
+def _scope_exempt_rules(path: Path) -> frozenset:
+    """Rules switched off for this file by SCOPE_EXEMPT configuration."""
+    parts = path.resolve().parts
+    if "repro" not in parts:
+        return frozenset()
+    i = len(parts) - 1 - tuple(reversed(parts)).index("repro")
+    rel = "/".join(parts[i + 1:-1])           # package dirs under repro
+    out: frozenset = frozenset()
+    for scope, rules in SCOPE_EXEMPT.items():
+        if rel == scope or rel.startswith(scope + "/"):
+            out = out | rules
+    return out
+
+
 def lint_file(path: Path) -> List[Finding]:
     # imported here: these modules import Finding from us
     from repro.analysis.determinism import DeterminismChecker
@@ -155,10 +179,11 @@ def lint_file(path: Path) -> List[Finding]:
     pragmas = _parse_pragmas(source, pstr, findings)
 
     raw: List[Finding] = []
+    exempt = _scope_exempt_rules(path)
     if _determinism_in_scope(path):
         det = DeterminismChecker(pstr)
         det.visit(tree)
-        raw.extend(det.findings)
+        raw.extend(f for f in det.findings if f.rule not in exempt)
     life = LifecycleChecker(pstr)
     life.run(tree)
     raw.extend(life.findings)

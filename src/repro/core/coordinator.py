@@ -36,8 +36,19 @@ from repro.core.walru import (CacheEntry, EvictionWeights, LRUCache,
                               PrefixLRUCache, WALRUCache)
 
 
-@dataclass
+_CACHE_POLICIES = ("walru", "lru", "prefix", "none")
+_OBS_TIERS = ("hints", "pattern", "none")
+
+
+@dataclass(kw_only=True)
 class SAGAConfig:
+    """Scheduling knobs for both substrates.  Keyword-only: every field
+    has a default and positional construction has never been supported
+    by any in-tree call site, so argument order can no longer silently
+    change meaning.  ``validate()`` is the single coherence gate
+    (replacing scattered asserts); the full field table lives in
+    docs/SERVING_API.md."""
+
     # WA-LRU (Eq. 1, Table 9)
     alpha: float = 0.3
     beta: float = 0.5
@@ -87,6 +98,68 @@ class SAGAConfig:
     disaggregate: bool = False
     seed: int = 0
 
+    def validate(self, *, roles: Optional[Sequence[str]] = None,
+                 n_workers: Optional[int] = None) -> "SAGAConfig":
+        """Raise ``ValueError`` listing every incoherent setting, or
+        return ``self`` so construction sites can chain.  ``roles`` is
+        the serving runtime's per-engine role list (``decode`` /
+        ``prefill``); when given, role/disaggregation coherence is
+        checked too.  Called from ``GlobalCoordinator.__init__`` so a
+        bad config fails loudly on both substrates."""
+        errs: List[str] = []
+
+        def rng(name: str, lo: float, hi: float) -> None:
+            v = getattr(self, name)
+            if not lo <= v <= hi:
+                errs.append(f"{name}={v!r} must be in [{lo}, {hi}]")
+
+        for f in ("alpha", "beta", "gamma", "th_low", "th_high",
+                  "theta_conf", "prefix_fraction"):
+            rng(f, 0.0, 1.0)
+        rng("ttl_percentile", 0.0, 100.0)
+        # theta is a load threshold in engine-count units, not a
+        # fraction: >1 deliberately over-commits toward affinity.
+        for f in ("theta", "t_idle_s", "r_max", "ttl_max_s", "epoch_s",
+                  "preempt_block_s"):
+            if getattr(self, f) <= 0:
+                errs.append(f"{f}={getattr(self, f)!r} must be > 0")
+        if self.min_tasks < 1:
+            errs.append(f"min_tasks={self.min_tasks!r} must be >= 1")
+        if self.th_low > self.th_high:
+            errs.append(f"th_low={self.th_low!r} must not exceed "
+                        f"th_high={self.th_high!r}")
+        if self.cache_policy not in _CACHE_POLICIES:
+            errs.append(f"cache_policy={self.cache_policy!r} not one of "
+                        f"{_CACHE_POLICIES}")
+        if self.observability not in _OBS_TIERS:
+            errs.append(f"observability={self.observability!r} not one "
+                        f"of {_OBS_TIERS}")
+        if self.preempt_deficit < 0:
+            errs.append(f"preempt_deficit={self.preempt_deficit!r} must "
+                        "be >= 0 (0 parks on any positive deficit)")
+        if self.preempt_deficit > 0 and not self.enable_preemption:
+            errs.append(f"preempt_deficit={self.preempt_deficit!r} has "
+                        "no effect without enable_preemption=True")
+        if self.enable_preemption and not self.enable_afs:
+            errs.append("enable_preemption=True needs enable_afs=True "
+                        "(preemption restores the AFS fair share)")
+        if roles is not None:
+            bad = sorted(set(roles) - {"decode", "prefill", "unified"})
+            if bad:
+                errs.append(f"unknown engine roles {bad!r} (want "
+                            "'prefill', 'decode' or 'unified')")
+            if n_workers is not None and len(roles) != n_workers:
+                errs.append(f"{len(roles)} roles for {n_workers} engines")
+            if "prefill" in roles and not self.disaggregate:
+                errs.append("prefill-role engines need "
+                            "SAGAConfig.disaggregate=True")
+            if self.disaggregate and all(r == "prefill" for r in roles):
+                errs.append("disaggregation needs a decode engine "
+                            "(all-prefill cluster can serve nothing)")
+        if errs:
+            raise ValueError("invalid SAGAConfig: " + "; ".join(errs))
+        return self
+
 
 @dataclass
 class SessionInfo:
@@ -108,6 +181,7 @@ class SessionInfo:
 class GlobalCoordinator:
     def __init__(self, cfg: SAGAConfig, n_workers: int,
                  worker_capacity_bytes: float):
+        cfg.validate()
         self.cfg = cfg
         self.n_workers = n_workers
         self.capacity = worker_capacity_bytes

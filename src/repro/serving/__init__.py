@@ -54,8 +54,23 @@ Architecture map (module -> paper section):
     affinity then routes *decode* placement only.  Every handoff job
     is attempt-stamped so an engine dying mid-handoff cancels cleanly
     and re-prefills token-identically.
+  * ``client.SagaClient`` — THE submission surface (``for_runtime`` /
+    ``for_server`` / ``for_simulation`` / ``for_driver``):
+    ``client.submit(program_or_request, tenant=, slo=)`` returns a
+    ``WorkflowHandle`` on every substrate; see docs/SERVING_API.md.
+  * ``schema`` — the documented ``stats()`` / ``summarize()`` key
+    vocabulary (``summarize()`` repr is the byte-identity pin; new
+    wall-clock keys live in ``AsyncServingDriver.wall_stats``).
+  * ``frontend`` — the wall-clock production surface (ROADMAP item 3):
+    ``AsyncServingDriver`` pumps the SAME event heap under asyncio
+    pacing (fake-clock mode replays the virtual run byte-identically),
+    ``SagaHTTPProxy`` speaks OpenAI-compatible chat completions with
+    ``X-Session-Id``/``X-Task-Id``/``X-Program-Id`` tracking headers,
+    pluggable load-balancing strategies, ``TrackedRequest`` lifecycle
+    accounting, and a Prometheus ``/metrics`` endpoint.
   * ``server.MultiWorkerServer`` — legacy blocking facade: a thin
-    serial wrapper over the runtime.
+    serial wrapper over the runtime (deprecated shim; use
+    ``SagaClient``).
   * ``sanitizer.RuntimeSanitizer`` — read-only per-event conservation
     auditor (``SAGA_SANITIZE=1`` / ``ServingRuntime(sanitize=True)``):
     block/slot ownership, incremental indices, and registry stamps

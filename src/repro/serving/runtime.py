@@ -184,6 +184,13 @@ class SessionState:
     handoff_ready: bool = False
     handoff_dst: int = -1
     handoff_lost: bool = False
+    # front-end extensions (serving/frontend, SagaClient): a one-shot
+    # engine preference consumed on the session's FIRST dispatch only
+    # (later steps follow Eq. 7 affinity as usual), and an explicit SLO
+    # deadline offset registered with the coordinator.  Both default
+    # off, so virtual-time byte-pins never see them.
+    route_hint: Optional[int] = None
+    slo_s: Optional[float] = None
 
     @property
     def tct(self) -> float:
@@ -302,14 +309,12 @@ class ServingRuntime:
                 "disaggregation needs paged engines (block handoff)"
         self.roles: List[str] = list(roles) if roles is not None \
             else [ROLE_UNIFIED] * self.n_workers
-        assert len(self.roles) == self.n_workers
+        # role/disagg coherence lives with every other config check in
+        # SAGAConfig.validate (the GlobalCoordinator ctor above already
+        # validated the role-free invariants)
+        self.co.cfg.validate(roles=self.roles, n_workers=self.n_workers)
         self._prefill_ids = [w for w, r in enumerate(self.roles)
                              if r == ROLE_PREFILL]
-        if self._prefill_ids and not self.disagg:
-            raise ValueError("prefill-role engines need "
-                             "SAGAConfig.disaggregate=True")
-        if self.disagg and not any(r != ROLE_PREFILL for r in self.roles):
-            raise ValueError("disaggregation needs a decode engine")
         for w in self._prefill_ids:
             self.co.set_worker_role(w, ROLE_PREFILL)
         self._pf = PrefillScheduler(self._prefill_ids)
@@ -441,7 +446,9 @@ class ServingRuntime:
 
     # -- submission -----------------------------------------------------
     def submit(self, req,
-               arrival: Optional[float] = None) -> "WorkflowHandle":
+               arrival: Optional[float] = None, *,
+               route_hint: Optional[int] = None,
+               slo_s: Optional[float] = None) -> "WorkflowHandle":
         """Submit a workflow: an ``AgentProgram`` (scripted / graph /
         dynamic) or a legacy ``AgentRequest`` (compiled to a scripted
         program, byte-identical execution).  Graph and dynamic programs
@@ -458,6 +465,8 @@ class ServingRuntime:
         t = max(self.ev.now,
                 inst.arrival_s if arrival is None else arrival)
         ses = SessionState(inst, sid, t)
+        ses.route_hint = route_hint
+        ses.slo_s = slo_s
         self.sessions[sid] = ses
         self.ev.schedule(t, "arrival", (sid,))
         if not self._epoch_live:
@@ -507,8 +516,9 @@ class ServingRuntime:
             self._tenant_workload.get(inst.tenant, 0.0) + work_est
         step_cost = work_est / max(len(counts), 1) \
             if aeg is not None else 0.0
+        slo = ses.slo_s if ses.slo_s is not None else 3600.0
         self.co.register_task(sid, inst.tenant, tools,
-                              deadline=self.ev.now + 3600.0,
+                              deadline=self.ev.now + slo,
                               work_est_s=work_est, now=self.ev.now,
                               prefix_tokens=0, aeg=aeg,
                               step_cost_s=step_cost,
@@ -582,6 +592,15 @@ class ServingRuntime:
             ses.handoff_ready = False
             ses.handoff_dst = -1
             ses.handoff_lost = True
+        hint, ses.route_hint = ses.route_hint, None   # one-shot
+        if hint is not None and 0 <= hint < self.n_workers \
+                and self._alive[hint] \
+                and self.roles[hint] != ROLE_PREFILL:
+            # the hint bypasses co.route, so record the placement as the
+            # session's home or Eq. 7 affinity can never find it on resume
+            self.co.router.set_home(sid, hint)
+            self._dispatch_to(sid, hint)
+            return
         w = self.co.route(sid, self.loads(), self.ev.now)
         self._dispatch_to(sid, w)
 

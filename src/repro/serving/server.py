@@ -13,6 +13,11 @@ completion at a time, preserving the original blocking ``run_task`` API
 interleaves many concurrent sessions.  Load reporting is the runtime's
 real queue-depth + slot-occupancy vector, not the old binary
 free-slot hack.
+
+DEPRECATED as a client surface: new code should submit through
+``repro.serving.client.SagaClient`` (``SagaClient.for_server(server)``
+wraps this object; ``run_task`` stays byte-identical for the golden
+pins).  See docs/SERVING_API.md.
 """
 from __future__ import annotations
 

@@ -1,0 +1,238 @@
+"""SagaClient facade + config/schema contract tests: one submit surface
+across all four substrates, equivalence with the deprecated entry
+points, SAGAConfig.validate's actionable errors, and the documented
+stats()/summarize() key vocabulary held against live runtimes."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.workload import swebench_workload
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.models import lm
+from repro.serving.client import SagaClient
+from repro.serving.frontend import AsyncServingDriver, FakeClock
+from repro.serving.runtime import AgentRequest, ServingRuntime
+from repro.serving.schema import (validate_stats, validate_summary,
+                                  validate_wall_stats)
+from repro.serving.server import MultiWorkerServer
+
+load_all()
+CFG = get_config("micro")
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+
+TOOLS = ["code_execution", "web_api", "file_operations"]
+
+
+def _mk_requests(n, n_steps=2, seed=0):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        steps = [(list(map(int, rng.randint(1, CFG.vocab, size=8))),
+                  4, TOOLS[s % 3], float(rng.uniform(0.05, 0.5)))
+                 for s in range(n_steps)]
+        reqs.append(AgentRequest(f"s{i}", f"t{i % 3}", steps))
+    return reqs
+
+
+def _mk_runtime(**kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 256)
+    kw.setdefault("pool_blocks", 96)
+    return ServingRuntime(CFG, PARAMS, seed=0, **kw)
+
+
+# -- the four backends --------------------------------------------------
+def test_runtime_backend_matches_raw_runtime():
+    raw = _mk_runtime()
+    for r in _mk_requests(5):
+        raw.submit(r)
+    raw.run()
+
+    client = SagaClient.for_runtime(_mk_runtime())
+    handles = [client.submit(r) for r in _mk_requests(5)]
+    client.run()
+    client.check_conservation()
+    assert repr(client.summarize()) == repr(raw.summarize())
+    assert all(h.done and h.status == "done" for h in handles)
+    assert client.handles[handles[0].session_id] is handles[0]
+    assert client.stats()["decode_steps"] > 0
+
+
+def test_server_backend_and_deprecated_run_task_shim():
+    """for_server(submit+run) and the deprecated blocking run_task see
+    the same runtime; the shim still works and agrees byte-for-byte."""
+    srv_a = MultiWorkerServer(CFG, PARAMS, n_workers=2, n_slots=4,
+                              max_len=256, pool_blocks=96)
+    for r in _mk_requests(3):
+        srv_a.run_task(r)
+
+    srv_b = MultiWorkerServer(CFG, PARAMS, n_workers=2, n_slots=4,
+                              max_len=256, pool_blocks=96)
+    client = SagaClient.for_server(srv_b)
+    assert client.runtime is srv_b.runtime
+    for r in _mk_requests(3):
+        h = client.submit(r)
+        client.run()
+        assert h.done
+    assert repr(client.summarize()) == repr(srv_a.runtime.summarize())
+
+
+def test_driver_backend():
+    rt = _mk_runtime()
+    client = SagaClient.for_driver(AsyncServingDriver(rt,
+                                                      clock=FakeClock()))
+    drv = client._driver
+
+    async def go():
+        hs = [client.submit(r) for r in _mk_requests(4)]
+        assert client.run() is None        # driver runs via its coroutine
+        await drv.run()
+        for h in hs:
+            assert (await h.wait()).state == "done"
+        return hs
+
+    hs = asyncio.run(go())
+    assert all(h.done for h in hs)
+    assert client.runtime is rt
+    client.check_conservation()
+    validate_wall_stats(drv.wall_stats)
+
+
+def test_simulation_backend():
+    tasks = swebench_workload(n_tasks=8, seed=1)
+    client = SagaClient.for_simulation(SAGAConfig(), n_workers=4, seed=1)
+    handles = [client.submit(t, slo=3600.0) for t in tasks]
+    assert all(h.status == "pending" for h in handles)
+    client.run()
+    client.check_conservation()
+    s = client.summarize()
+    assert s["n_tasks"] == 8 and s["tct_mean"] > 0.0
+    for h in handles:
+        assert h.done and h.status == "done"
+        assert h.tct > 0.0
+        assert h.slo_met is not None
+    # a sim client is one-shot: the simulator took its tasks at build
+    with pytest.raises(RuntimeError, match="already ran"):
+        client.submit(tasks[0])
+
+
+def test_submit_tenant_and_slo_overrides():
+    rt = _mk_runtime()
+    client = SagaClient.for_runtime(rt)
+    req = _mk_requests(1)[0]
+    h = client.submit(req, tenant="override", slo=12.5)
+    assert req.tenant == "t0"                  # caller's object untouched
+    ses = rt.sessions[h.session_id]
+    assert ses.inst.program.tenant == "override"
+    assert ses.slo_s == 12.5
+    client.run()
+    assert h.done
+
+
+def test_client_requires_exactly_one_backend():
+    with pytest.raises(ValueError, match="for_runtime"):
+        SagaClient()
+    with pytest.raises(ValueError, match="for_runtime"):
+        SagaClient(_runtime=object(), _server=object())
+
+
+# -- SAGAConfig.validate ------------------------------------------------
+def test_config_is_keyword_only():
+    with pytest.raises(TypeError):
+        SAGAConfig(0.5)
+
+
+def test_config_validate_accepts_defaults_and_chains():
+    cfg = SAGAConfig()
+    assert cfg.validate() is cfg
+    SAGAConfig(theta=5.0).validate()           # engine-count units: legal
+
+
+def test_config_validate_lists_every_error():
+    with pytest.raises(ValueError) as ei:
+        SAGAConfig(alpha=1.5, theta=0.0, cache_policy="belady",
+                   th_low=0.9, th_high=0.2).validate()
+    msg = str(ei.value)
+    assert "alpha=1.5 must be in [0.0, 1.0]" in msg
+    assert "theta=0.0 must be > 0" in msg
+    assert "cache_policy='belady' not one of" in msg
+    assert "th_low=0.9 must not exceed th_high=0.2" in msg
+
+
+def test_config_validate_cross_field_rules():
+    with pytest.raises(ValueError, match="enable_preemption"):
+        SAGAConfig(preempt_deficit=1.0).validate()
+    with pytest.raises(ValueError, match="enable_afs"):
+        SAGAConfig(enable_preemption=True, enable_afs=False).validate()
+    SAGAConfig(enable_preemption=True, enable_afs=True,
+               preempt_deficit=1.0).validate()
+
+
+def test_config_validate_roles():
+    cfg = SAGAConfig()
+    with pytest.raises(ValueError, match="unknown engine roles"):
+        cfg.validate(roles=["decode", "gpu"], n_workers=2)
+    with pytest.raises(ValueError, match="2 roles for 3 engines"):
+        cfg.validate(roles=["unified", "unified"], n_workers=3)
+    with pytest.raises(ValueError, match="disaggregate=True"):
+        cfg.validate(roles=["prefill", "decode"], n_workers=2)
+    with pytest.raises(ValueError, match="all-prefill"):
+        SAGAConfig(disaggregate=True).validate(
+            roles=["prefill", "prefill"], n_workers=2)
+    SAGAConfig(disaggregate=True).validate(
+        roles=["prefill", "decode"], n_workers=2)
+
+
+def test_bad_config_fails_loudly_at_construction():
+    with pytest.raises(ValueError, match="invalid SAGAConfig"):
+        _mk_runtime(saga=SAGAConfig(alpha=-1.0))
+
+
+# -- stats()/summarize() schema ----------------------------------------
+def _run_requests(**kw):
+    rt = _mk_runtime(**kw)
+    for r in _mk_requests(4):
+        rt.submit(r)
+    rt.run()
+    return rt
+
+
+def test_schema_default_mode():
+    rt = _run_requests()
+    validate_stats(rt.stats())
+    validate_summary(rt.summarize())
+
+
+def test_schema_fault_and_disagg_modes():
+    rt = _run_requests(saga=SAGAConfig(enable_afs=True,
+                                       enable_preemption=True))
+    validate_stats(rt.stats())
+    validate_summary(rt.summarize(), fault=True)
+
+    rt = _run_requests(n_workers=3, n_slots=3,
+                       saga=SAGAConfig(disaggregate=True))
+    validate_stats(rt.stats())
+    validate_summary(rt.summarize(), disagg=True)
+
+
+def test_schema_rejects_drift():
+    rt = _run_requests()
+    s = rt.stats()
+    s["new_counter"] = 7
+    with pytest.raises(AssertionError, match="not in the schema"):
+        validate_stats(s)
+    s = rt.stats()
+    del s["steals"]
+    with pytest.raises(AssertionError, match="missing documented"):
+        validate_stats(s)
+    summ = rt.summarize()
+    summ["extra"] = 1.0
+    with pytest.raises(AssertionError, match="schema expectation"):
+        validate_summary(summ)
+    # conditional keys may not appear in default mode
+    with pytest.raises(AssertionError, match="schema expectation"):
+        validate_summary(rt.summarize(), fault=True)

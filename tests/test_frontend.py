@@ -1,0 +1,303 @@
+"""Asyncio wall-clock front end tests: fake-clock byte-identity with
+the virtual-time loop (inline and executor-threaded), the OpenAI proxy
+round trip with sticky session headers landing park/resume on one
+engine, pluggable LB strategies, /metrics shape, and a soak-style
+conservation gate over real wall clock."""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, load_all
+from repro.core.coordinator import SAGAConfig
+from repro.models import lm
+from repro.serving.client import SagaClient
+from repro.serving.frontend import (AsyncServingDriver, FakeClock,
+                                    LeastLoaded, RoundRobin, SagaHTTPProxy,
+                                    Strategy, get_strategy,
+                                    register_strategy)
+from repro.serving.runtime import AgentRequest, ServingRuntime
+from repro.serving.schema import validate_wall_stats
+
+load_all()
+CFG = get_config("micro")
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+
+TOOLS = ["code_execution", "web_api", "file_operations"]
+
+
+def _mk_requests(n, n_steps=2, seed=0, prompt_len=8, n_out=4):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        steps = [(list(map(int, rng.randint(1, CFG.vocab,
+                                            size=prompt_len))),
+                  n_out, TOOLS[s % 3], float(rng.uniform(0.05, 0.5)))
+                 for s in range(n_steps)]
+        reqs.append(AgentRequest(f"s{i}", f"t{i % 3}", steps))
+    return reqs
+
+
+def _mk_runtime(**kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 256)
+    kw.setdefault("pool_blocks", 96)
+    kw.setdefault("saga", SAGAConfig())
+    return ServingRuntime(CFG, PARAMS, seed=0, **kw)
+
+
+def _virtual_summary(reqs):
+    rt = _mk_runtime()
+    for r in reqs:
+        rt.submit(r)
+    rt.run()
+    rt.check_conservation()
+    return repr(rt.summarize())
+
+
+def _driver_summary(reqs, *, executor):
+    rt = _mk_runtime()
+    drv = AsyncServingDriver(rt, clock=FakeClock(), executor=executor)
+    client = SagaClient.for_driver(drv)
+
+    async def go():
+        for r in reqs:
+            client.submit(r)
+        await drv.run()
+
+    asyncio.run(go())
+    rt.check_conservation()
+    validate_wall_stats(drv.wall_stats)
+    assert drv.wall_stats["events"] > 0
+    return repr(rt.summarize())
+
+
+# -- byte-identity ------------------------------------------------------
+def test_fake_clock_reproduces_virtual_run_byte_identically():
+    """The driver pops the same heap through the same handlers with the
+    same termination condition, so a fake-clock run must reproduce the
+    virtual-time summarize() repr byte for byte."""
+    want = _virtual_summary(_mk_requests(6))
+    assert _driver_summary(_mk_requests(6), executor=False) == want
+
+
+def test_fake_clock_byte_identity_with_executor_thread():
+    """Handler execution on the worker thread stays strictly serial, so
+    threading must not perturb a single byte either."""
+    want = _virtual_summary(_mk_requests(6))
+    assert _driver_summary(_mk_requests(6), executor=True) == want
+
+
+# -- HTTP proxy ---------------------------------------------------------
+async def _http(port, method, path, body=None, headers=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps(body).encode() if body is not None else b""
+    head = f"{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n"
+    for k, v in (headers or {}).items():
+        head += f"{k}: {v}\r\n"
+    head += f"Content-Length: {len(payload)}\r\n\r\n"
+    writer.write(head.encode() + payload)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    status = int(data.split(b" ", 2)[1])
+    hdr_blob, _, rest = data.partition(b"\r\n\r\n")
+    hdrs = {}
+    for line in hdr_blob.split(b"\r\n")[1:]:
+        k, _, v = line.decode("latin-1").partition(":")
+        hdrs[k.strip().lower()] = v.strip()
+    return status, hdrs, rest
+
+
+CHAT = {"model": "t", "max_tokens": 4,
+        "messages": [{"role": "user", "content": "step one prompt"},
+                     {"role": "assistant", "content": "ok"},
+                     {"role": "user", "content": "step two prompt"}],
+        "saga": {"tool_gap_s": 0.05, "step_tokens": 3}}
+
+
+def test_http_round_trip_sticky_session_and_metrics():
+    """Two completions on one X-Session-Id land on the same engine (the
+    proxy hints the session's KV home); the multi-turn body parks on
+    its tool gap; /metrics and /healthz expose the fleet."""
+    rt = _mk_runtime()
+    drv = AsyncServingDriver(rt, time_scale=0.01)
+    proxy_holder = {}
+
+    async def go():
+        proxy = await SagaHTTPProxy(drv, strategy="round-robin").start()
+        proxy_holder["p"] = proxy
+        pump = asyncio.create_task(drv.serve_forever())
+        out = []
+        for i in range(2):
+            status, hdrs, body = await _http(
+                proxy.port, "POST", "/v1/chat/completions", CHAT,
+                {"X-Session-Id": "cli-A", "X-Task-Id": f"task-{i}",
+                 "X-Program-Id": "prog-A", "X-Tenant": "tenantA"})
+            out.append((status, hdrs, json.loads(body)))
+        # a distinct client session goes through the strategy instead
+        status_b, hdrs_b, _ = await _http(
+            proxy.port, "POST", "/v1/chat/completions", CHAT,
+            {"X-Session-Id": "cli-B"})
+        st_m, _, metrics = await _http(proxy.port, "GET", "/metrics")
+        st_h, _, health = await _http(proxy.port, "GET", "/healthz")
+        st_r, _, lifecycle = await _http(
+            proxy.port, "GET",
+            "/v1/requests/" + out[1][2]["saga"]["session_id"])
+        drv.stop()
+        await pump
+        await proxy.stop()
+        return out, (status_b, hdrs_b), (st_m, metrics), \
+            (st_h, health), (st_r, lifecycle)
+
+    out, b, met, health, life = asyncio.run(go())
+    for status, hdrs, resp in out:
+        assert status == 200
+        assert resp["object"] == "chat.completion"
+        assert resp["choices"][0]["message"]["content"].startswith("tok")
+        assert resp["usage"]["completion_tokens"] > 0
+        assert resp["saga"]["steps"] == 2        # two user turns parked
+        assert hdrs["x-session-id"] == "cli-A"
+        assert hdrs["x-program-id"] == "prog-A"
+    assert out[0][1]["x-task-id"] == "task-0"
+    # sticky: request 2 followed request 1's KV home
+    assert out[1][1]["x-engine"] == out[0][1]["x-engine"]
+    assert b[0] == 200
+    assert met[0] == 200
+    text = met[1].decode()
+    for family in ("saga_queue_depth", "saga_engine_alive",
+                   "saga_kv_pool_blocks_used", "saga_kv_pool_blocks_total",
+                   "saga_kv_handoff_bytes", "saga_afs_deviation_max",
+                   "saga_sessions_done", "saga_runtime_prefill_tokens"):
+        assert family in text, f"/metrics missing {family}"
+    assert 'saga_queue_depth{engine="1"}' in text
+    assert health[0] == 200
+    assert json.loads(health[1])["engines"] == 2
+    assert life[0] == 200
+    lc = json.loads(life[1])
+    assert lc["phase"] == "done"
+    assert lc["tenant"] == "tenantA"
+    assert "parked" in lc["phase_wall_s"]        # the tool gap was real
+    assert lc["first_token_wall"] is not None
+    rt.check_conservation()
+
+
+def test_http_streaming_sse():
+    rt = _mk_runtime()
+    drv = AsyncServingDriver(rt, time_scale=0.01)
+
+    async def go():
+        proxy = await SagaHTTPProxy(drv).start()
+        pump = asyncio.create_task(drv.serve_forever())
+        status, hdrs, body = await _http(
+            proxy.port, "POST", "/v1/chat/completions",
+            dict(CHAT, stream=True), {"X-Session-Id": "s"})
+        drv.stop()
+        await pump
+        await proxy.stop()
+        return status, hdrs, body
+
+    status, hdrs, body = asyncio.run(go())
+    assert status == 200
+    assert hdrs["transfer-encoding"] == "chunked"
+    assert b"chat.completion.chunk" in body
+    assert b'"finish_reason": "stop"' in body
+    assert body.rstrip().endswith(b"0")          # final chunk terminator
+    assert b"data: [DONE]" in body
+
+
+# -- strategies ---------------------------------------------------------
+def test_strategy_picks():
+    loads, alive = [3.0, 1.0, 2.0], [True, True, True]
+    roles = ["unified", "unified", "unified"]
+    assert get_strategy("saga-affinity").pick("k", loads, alive,
+                                              roles) is None
+    assert LeastLoaded().pick("k", loads, alive, roles) == 1
+    rr = RoundRobin()
+    assert [rr.pick("k", loads, alive, roles) for _ in range(4)] == \
+        [0, 1, 2, 0]
+    # dead and prefill-role engines are never picked
+    assert LeastLoaded().pick("k", loads, [True, False, True],
+                              ["prefill", "unified", "unified"]) == 2
+    rr2 = RoundRobin()
+    assert [rr2.pick("k", loads, [True, False, True],
+                     ["unified", "unified", "unified"])
+            for _ in range(3)] == [0, 2, 0]
+    assert LeastLoaded().pick("k", loads, [False] * 3, roles) is None
+
+
+def test_strategy_registry_and_custom_plugin():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("nope")
+
+    class Pinned(Strategy):
+        name = "pin-last-test"
+
+        def pick(self, session_key, loads, alive, roles):
+            ok = self._eligible(loads, alive, roles)
+            return ok[-1] if ok else None
+
+    register_strategy(Pinned)
+    assert get_strategy("pin-last-test").pick(
+        "k", [0.0, 0.0], [True, True], ["unified", "unified"]) == 1
+    with pytest.raises(ValueError, match="taken"):
+        register_strategy(Pinned)
+
+
+def test_route_hint_is_one_shot_first_placement():
+    """route_hint pins the first dispatch; later steps follow the
+    scheduler (here: affinity keeps them home)."""
+    rt = _mk_runtime()
+    h = rt.submit(AgentRequest("s0", "t0", [
+        ([5, 6, 7], 4, "web_api", 0.05),
+        ([8, 9], 4, "web_api", 0.05)]), route_hint=1)
+    rt.run()
+    assert h.done
+    # hinted first placement became the session's home, so the resume
+    # after the tool gap was an affinity cache hit on the same engine
+    assert rt.sessions["s0"].engine == 1
+    assert rt.stats()["coordinator_hits"] == 1
+
+
+# -- wall-clock soak (small) -------------------------------------------
+def test_wall_clock_soak_conserves():
+    """Real WallClock + executor thread + compressed time scale: every
+    session completes, no slot/block leaks, pacing stats sane."""
+    rt = _mk_runtime(n_slots=6)
+    drv = AsyncServingDriver(rt, time_scale=0.002, executor=True)
+    client = SagaClient.for_driver(drv)
+    reqs = _mk_requests(24, seed=3)
+
+    async def go():
+        handles = [client.submit(r) for r in reqs]
+        await drv.run()
+        return handles
+
+    handles = asyncio.run(go())
+    assert all(h.done for h in handles)
+    rt.check_conservation()
+    rt.verify_pool_mirrors()
+    for eng in rt.engines:
+        assert eng.pool.audit_blocks() == []
+    validate_wall_stats(drv.wall_stats)
+    assert drv.wall_stats["submitted"] == 24
+    assert drv.wall_stats["wall_elapsed_s"] > 0.0
+
+
+def test_driver_rejects_bad_time_scale_and_double_run():
+    rt = _mk_runtime()
+    with pytest.raises(ValueError, match="time_scale"):
+        AsyncServingDriver(rt, time_scale=0.0)
+
+    drv = AsyncServingDriver(rt, clock=FakeClock())
+
+    async def go():
+        drv._begin()
+        with pytest.raises(RuntimeError, match="already running"):
+            await drv.run()
+        drv._end()
+
+    asyncio.run(go())

@@ -397,3 +397,53 @@ def test_parse_error_reported(tmp_path):
     assert _rules(fs) == ["parse-error"]
     with pytest.raises(SystemExit):
         main([])
+
+
+# -- scoped configuration exemptions -----------------------------------
+LOOP_TIME_SRC = (
+    "import asyncio\n"
+    "def f(self):\n"
+    "    loop = asyncio.get_running_loop()\n"
+    "    return loop.time()\n")
+
+
+def test_loop_time_flagged_in_scheduler_scope(tmp_path):
+    """loop.time() is a det-clock read everywhere in scheduler code..."""
+    p = tmp_path / "repro" / "serving" / "mod.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(LOOP_TIME_SRC)
+    assert "det-clock" in _rules(lint_file(p))
+
+
+def test_loop_time_permitted_in_frontend_scope(tmp_path):
+    """...except under serving/frontend, whose SCOPE_EXEMPT charter is
+    to read the wall clock — configuration, not per-line pragmas."""
+    p = tmp_path / "repro" / "serving" / "frontend" / "mod.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(LOOP_TIME_SRC)
+    fs = lint_file(p)
+    assert "det-clock" not in _rules(fs)
+    # the exemption is det-clock ONLY: other determinism rules survive
+    p.write_text(LOOP_TIME_SRC + "def g(x):\n    return hash(x)\n")
+    assert _rules(lint_file(p)) == ["det-hash"]
+
+
+def test_frontend_scope_is_exact_prefix(tmp_path):
+    """A look-alike package elsewhere gets no exemption."""
+    p = tmp_path / "repro" / "cluster" / "frontend" / "mod.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(LOOP_TIME_SRC)
+    assert "det-clock" in _rules(lint_file(p))
+
+
+def test_repo_frontend_actually_reads_the_clock():
+    """The shipped wall-clock driver uses the exempted idiom (if this
+    stops being true, drop the SCOPE_EXEMPT entry)."""
+    src = (REPO / "src" / "repro" / "serving" / "frontend"
+           / "clock.py").read_text()
+    assert "loop.time()" in src
+    from repro.analysis.sagalint import lint_paths
+    findings, n = lint_paths([str(REPO / "src" / "repro" / "serving"
+                                  / "frontend")])
+    assert n >= 5
+    assert findings == []
